@@ -1,0 +1,59 @@
+"""Benchmark helpers: wall-clock timing of jitted callables + table IO.
+
+Timing on this container is single-core CPU — absolute numbers are NOT
+the paper's (AMD EPYC 7713 x 64 ranks); the *relative* structure (PA vs
+PAop, the p-sweep shape, the ablation ordering) is what reproduces the
+paper's claims.  TPU-target absolute performance lives in the dry-run
+roofline (EXPERIMENTS.md §Roofline), not here.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+__all__ = ["time_fn", "fmt_table", "Row"]
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, repeats: int = 3,
+            min_time_s: float = 0.05) -> float:
+    """Median wall-clock seconds of fn(*args) after jit warmup."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        n = 0
+        t0 = time.perf_counter()
+        dt = 0.0
+        while dt < min_time_s:
+            out = fn(*args)
+            jax.block_until_ready(out)
+            n += 1
+            dt = time.perf_counter() - t0
+        times.append(dt / n)
+    times.sort()
+    return times[len(times) // 2]
+
+
+class Row(dict):
+    pass
+
+
+def fmt_table(rows: list[dict], cols: list[str], title: str = "") -> str:
+    out = []
+    if title:
+        out.append(f"### {title}")
+    out.append("| " + " | ".join(cols) + " |")
+    out.append("|" + "|".join("---" for _ in cols) + "|")
+    for r in rows:
+        cells = []
+        for c in cols:
+            v = r.get(c, "")
+            if isinstance(v, float):
+                v = f"{v:.4g}"
+            cells.append(str(v))
+        out.append("| " + " | ".join(cells) + " |")
+    return "\n".join(out)

@@ -1,0 +1,84 @@
+"""Paper Fig. 6: roofline placement of the elasticity operator.
+
+Reads the dry-run artifacts (runs/dryrun/elasticity__*.json) produced by
+``python -m repro.launch.dryrun`` and prints the three roofline terms
+per cell against the TPU v5e ceilings, plus the OI trajectory PA -> PAop
+computed analytically (Table 5's counts over the streaming-bytes model).
+Falls back to analytic-only output if no dry-run artifacts exist yet.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import fmt_table
+from benchmarks.table5_flops import analytic_flops_per_elem
+from repro.launch.roofline import V5E
+
+
+def analytic_rows(ps=(1, 2, 4, 8), itemsize=4):
+    rows = []
+    for p in ps:
+        D, Q = p + 1, p + 2
+        a = analytic_flops_per_elem(p)
+        stream = itemsize * (2 * 3 * D**3 + 2 * Q**3)
+        # baseline additionally streams QVec (9 ch, fwd+bwd) + dense G3D
+        qvec = itemsize * 2 * 9 * Q**3
+        g3d = itemsize * (3 * D**3) * (3 * Q**3)
+        rows.append({
+            "p": p,
+            "oi_paop": a["paop"] / stream,
+            "oi_pa_baseline": a["dense_baseline"] / (stream + qvec + g3d),
+            "ridge_point": V5E.peak_flops / V5E.hbm_bw,
+        })
+    return rows
+
+
+def dryrun_rows(dryrun_dir="runs/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "elasticity__*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        c = rec["cost"]
+        coll = rec["collectives"]
+        chips = rec["chips"]
+        rows.append({
+            "cell": f"{rec['shape']}@{rec['mesh']}",
+            "compute_s": c["flops_per_dev"] / V5E.peak_flops,
+            "memory_s": c["bytes_per_dev"] / V5E.hbm_bw,
+            "collective_s": coll["link_bytes"] / V5E.link_bw,
+            "oi_flops_per_byte": (
+                c["flops_per_dev"] / c["bytes_per_dev"]
+                if c["bytes_per_dev"] else float("nan")
+            ),
+        })
+    return rows
+
+
+def main(fast: bool = False):
+    arows = analytic_rows()
+    print(fmt_table(
+        arows, ["p", "oi_pa_baseline", "oi_paop", "ridge_point"],
+        title="Fig. 6 analogue: OI trajectory PA -> PAop vs v5e ridge "
+              f"({V5E.peak_flops/1e12:.0f} TF/s / {V5E.hbm_bw/1e9:.0f} GB/s)",
+    ))
+    drows = dryrun_rows()
+    if drows:
+        print()
+        print(fmt_table(
+            drows,
+            ["cell", "compute_s", "memory_s", "collective_s",
+             "oi_flops_per_byte"],
+            title="Roofline terms from dry-run artifacts (per AddMult)",
+        ))
+    else:
+        print("\n(no dry-run artifacts found; run python -m repro.launch.dryrun)")
+    return arows + drows
+
+
+if __name__ == "__main__":
+    main()

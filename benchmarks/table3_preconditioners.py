@@ -1,0 +1,85 @@
+"""Paper Table 3: preconditioner comparison on the GMG hierarchy.
+
+Four solver variants (the paper's fa_amg column maps to an assembled
+coarse-solve configuration; classical AMG setup is CPU-shaped and out of
+scope on TPU — see DESIGN.md hardware-adaptation table):
+
+  fa_gmg   — assembled fine operator + GMG
+  pa_jac   — matrix-free PA + Jacobi-preconditioned PCG (the simple
+             directly matrix-free baseline; iteration counts explode)
+  pa_gmg   — matrix-free PA + GMG
+  paop_gmg — optimized PAop + GMG (this work)
+
+Reports iterations + phase breakdown (Prec. / Form-LS / Solve / Total),
+the paper's three-effect story: GMG slashes iterations; PA keeps setup
+flat; PAop shrinks Solve.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_table
+from repro.core.operators import ElasticityOperator
+from repro.fem.bc import eliminate_rhs
+from repro.fem.mesh import beam_hex
+from repro.fem.space import H1Space
+from repro.launch.solve import TRACTION, solve_beam
+from repro.solvers.cg import pcg
+
+
+def _pa_jacobi(p: int, refine: int, rel_tol=1e-6, dtype=jnp.float64):
+    mesh = beam_hex().refined(refine)
+    space = H1Space(mesh, p)
+    t0 = time.perf_counter()
+    op = ElasticityOperator(space, assembly="paop", dtype=dtype)
+    cop = op.constrained()
+    dinv = 1.0 / cop.diagonal()
+    t1 = time.perf_counter()
+    b = jnp.asarray(space.traction_rhs("x1", TRACTION), dtype=dtype)
+    b = eliminate_rhs(op.apply, op.ess_mask, b)
+    t2 = time.perf_counter()
+    res = jax.jit(
+        lambda bv: pcg(cop, bv, M=lambda r: dinv * r, rel_tol=rel_tol,
+                       maxiter=5000)
+    )(b)
+    jax.block_until_ready(res.x)
+    t3 = time.perf_counter()
+    return {
+        "solver": "pa_jac", "p": p, "iters": int(res.iterations),
+        "prec_s": t1 - t0, "form_s": t2 - t1, "solve_s": t3 - t2,
+        "total_s": t3 - t0,
+    }
+
+
+def run(ps=(1, 2, 4), refine: int = 1) -> list[dict]:
+    rows = []
+    for p in ps:
+        for solver, assembly in (
+            ("fa_gmg", "fa"), ("pa_gmg", "pa_sumfact_voigt"), ("paop_gmg", "paop"),
+        ):
+            rep = solve_beam(p, n_h_refine=refine, assembly=assembly)
+            rows.append({
+                "solver": solver, "p": p, "iters": rep.iterations,
+                "prec_s": rep.t_precond, "form_s": rep.t_form_ls,
+                "solve_s": rep.t_solve, "total_s": rep.t_total,
+            })
+        rows.append(_pa_jacobi(p, refine))
+    return rows
+
+
+def main(fast: bool = False):
+    rows = run(ps=(1, 2) if fast else (1, 2, 4), refine=1)
+    print(fmt_table(
+        rows,
+        ["p", "solver", "iters", "prec_s", "form_s", "solve_s", "total_s"],
+        title="Table 3 analogue: preconditioner comparison (CPU wall)",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

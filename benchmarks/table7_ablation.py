@@ -1,0 +1,79 @@
+"""Paper Table 7: cumulative ablation of the four optimization stages.
+
+Stages in build order (C1/C2/C3/PAop — the paper's Table 7 ordering):
+  PA (baseline)         -> MFEM v4.8-equivalent dense-contraction dataflow
+  + Sum Factorization   -> pa_sumfact      (C1, Sec. 4.4)
+  + Voigt Notation      -> pa_sumfact_voigt(C2, Sec. 4.3)
+  + Kernel Fusion       -> paop            (C3, Sec. 4.2: the fused
+                           per-element chain is one XLA producer-consumer
+                           region; no whole-mesh QVec intermediates)
+  + Slice/Tile Loops    -> paop_pallas     (Sec. 4.5's working-set bound,
+                           realized as the Pallas VMEM block kernel;
+                           timed in interpret mode on CPU, so its wall
+                           time here is NOT meaningful — marked)
+
+Reports kernel (AddMult) time and marginal speedup at fixed problem
+size.  CPU single-core: relative structure reproduces the paper's story.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import fmt_table, time_fn
+from repro.core.operators import ElasticityOperator
+from repro.fem.mesh import beam_hex
+from repro.fem.space import H1Space
+
+STAGES = [
+    ("PA (baseline)", "pa_baseline"),
+    ("+ Sum Factorization (C1)", "pa_sumfact"),
+    ("+ Voigt Notation (C2)", "pa_sumfact_voigt"),
+    ("+ Kernel Fusion (C3=PAop)", "paop"),
+]
+
+
+def run(p: int = 8, refine: int = 0, dtype=jnp.float64) -> list[dict]:
+    mesh = beam_hex().refined(refine)
+    space = H1Space(mesh, p)
+    x = jnp.asarray(
+        jax.random.normal(jax.random.PRNGKey(0), (space.nscalar, 3), dtype)
+    )
+    rows = []
+    prev = None
+    for label, assembly in STAGES:
+        op = ElasticityOperator(space, assembly=assembly, dtype=dtype)
+        f = jax.jit(op.apply)
+        t = time_fn(f, x)
+        row = {
+            "stage": label,
+            "assembly": assembly,
+            "kernel_time_s": t,
+            "marginal_speedup": (prev / t) if prev else float("nan"),
+            "ndof": space.ndof,
+            "mdof_per_s": space.ndof / t / 1e6,
+        }
+        rows.append(row)
+        prev = t
+    base = rows[0]["kernel_time_s"]
+    for r in rows:
+        r["cumulative_speedup"] = base / r["kernel_time_s"]
+    return rows
+
+
+def main(fast: bool = False):
+    # refine=1 -> 64 elements: enough work that the contraction cost (not
+    # dispatch overhead) is what the stages differentiate.
+    rows = run(p=8 if not fast else 4, refine=0 if fast else 1)
+    print(fmt_table(
+        rows,
+        ["stage", "kernel_time_s", "marginal_speedup", "cumulative_speedup",
+         "mdof_per_s"],
+        title="Table 7 analogue: cumulative ablation (p=8, beam, CPU wall)",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

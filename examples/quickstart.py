@@ -1,0 +1,45 @@
+"""Quickstart: the paper's optimized matrix-free operator in 30 lines.
+
+Builds the two-material beam at p=4, applies the PAop operator (the
+paper's contribution) and solves the benchmark problem with GMG-PCG.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.operators import ElasticityOperator  # noqa: E402
+from repro.fem.mesh import beam_hex  # noqa: E402
+from repro.fem.space import H1Space  # noqa: E402
+from repro.launch.solve import solve_beam  # noqa: E402
+
+
+def main():
+    # --- the operator: y = A x without ever assembling A -----------------
+    space = H1Space(beam_hex().refined(), p=4)
+    op = ElasticityOperator(space, assembly="paop")
+    x = jnp.ones((space.nscalar, 3))
+    y = jax.jit(op.apply)(x)
+    print(f"AddMult: {space.ndof} DoFs, |A.1| = {float(jnp.abs(y).max()):.3e} "
+          "(rigid translation -> ~0: matrix-free operator is consistent)")
+
+    # --- the solver: GMG-preconditioned CG on the beam benchmark ---------
+    rep = solve_beam(p=4, n_h_refine=1, assembly="paop")
+    print(
+        f"GMG-PCG solve: p={rep.p} ndof={rep.ndof} iters={rep.iterations} "
+        f"rel={rep.final_rel_norm:.2e} total={rep.t_total:.2f}s"
+    )
+
+    # --- the ablation: every stage of the paper's Table 7 is selectable --
+    for assembly in ("pa_baseline", "pa_sumfact", "paop", "paop_pallas"):
+        op = ElasticityOperator(space, assembly=assembly)
+        yv = jax.jit(op.apply)(x)
+        print(f"  {assembly:18s} max|y| = {float(jnp.abs(yv).max()):.6e}")
+
+
+if __name__ == "__main__":
+    main()

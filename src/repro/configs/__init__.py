@@ -1,0 +1,19 @@
+from repro.configs.base import (
+    ALIASES,
+    ARCH_IDS,
+    SHAPES,
+    ArchConfig,
+    ShapeConfig,
+    get_config,
+    get_reduced,
+)
+
+__all__ = [
+    "ALIASES",
+    "ARCH_IDS",
+    "SHAPES",
+    "ArchConfig",
+    "ShapeConfig",
+    "get_config",
+    "get_reduced",
+]

@@ -1,0 +1,32 @@
+"""Qwen1.5-32B [dense]: 64L d_model=5120 40H (MHA kv=40) d_ff=27392
+vocab=152064 — QKV bias.  [hf:Qwen/Qwen1.5-0.5B family; hf]"""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen1.5-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=40,
+    d_ff=27392,
+    vocab=152064,
+    qkv_bias=True,
+    rope_theta=1e6,
+)
+
+
+def reduced() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG,
+        name="qwen1.5-32b-reduced",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=128,
+        vocab=256,
+    )

@@ -1,0 +1,150 @@
+"""Full Assembly (FA): the global sparse stiffness matrix the paper
+compares against (Sec. 2.2.1) and the coarse-level matrix of the GMG
+preconditioner (Sec. 3.2).
+
+Element matrices are built from the dense 3D gradient table by quadrature
+(O((p+1)^6) storage per element — the capacity limitation the paper
+demonstrates with its OOM rows in Table 4), assembled into CSR with
+scipy at setup, and applied either through scipy (host) or through a
+jnp gather/segment-sum SpMV (device path used by solvers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+import jax.ops
+import numpy as np
+import scipy.sparse as sp
+
+from repro.core.basis import BasisTables
+from repro.core.geometry import QuadratureData
+from repro.core.pa_baseline import _dense_grad_table_np
+from repro.fem.space import H1Space
+
+__all__ = ["element_matrix", "assemble_sparse", "SparseMatrix", "fa_memory_bytes"]
+
+
+def _chat(jinv: np.ndarray, lam: float, mu: float) -> np.ndarray:
+    """Reference-pulled-back elasticity tensor
+    Chat[i, m, k, n] = sum_{j,l} Jinv[m,j] C_{ijkl} Jinv[n,l]
+    for the isotropic C = lam d_ij d_kl + mu (d_ik d_jl + d_il d_jk)."""
+    JJt = jinv @ jinv.T
+    eye = np.eye(3)
+    chat = (
+        lam * np.einsum("mi,nk->imkn", jinv, jinv)
+        + mu * np.einsum("ik,mn->imkn", eye, JJt)
+        + mu * np.einsum("mk,ni->imkn", jinv, jinv)
+    )
+    return chat
+
+
+def element_matrix(
+    p: int, jinv: np.ndarray, detj: float, lam: float, mu: float
+) -> np.ndarray:
+    """Dense element stiffness matrix, shape (3*nd, 3*nd) with vdof
+    ordering (node-major: dof = 3*node + comp)."""
+    tb = BasisTables(p)
+    g3 = _dense_grad_table_np(p)  # (3, nq, nd)
+    w = tb.qwts
+    w3 = (w[:, None, None] * w[None, :, None] * w[None, None, :]).reshape(-1)
+    chat = _chat(jinv, lam, mu) * detj  # fold detJ; w folded below
+    # K[(L,i),(M,k)] = sum_q w3[q] G3[m,q,L] Chat[i,m,k,n] G3[n,q,M]
+    K = np.einsum("mqL,q,imkn,nqM->LiMk", g3, w3, chat, g3, optimize=True)
+    nd = g3.shape[2]
+    return K.reshape(3 * nd, 3 * nd)
+
+
+@dataclasses.dataclass
+class SparseMatrix:
+    """CSR matrix with both a scipy handle (host ops, factorizations) and
+    jnp index arrays for an on-device gather/segment-sum SpMV."""
+
+    csr: sp.csr_matrix
+    data: Any
+    cols: Any
+    rows: Any  # COO row per nonzero (sorted by row)
+    n: int
+
+    @classmethod
+    def from_scipy(cls, m: sp.spmatrix, dtype=jnp.float64) -> "SparseMatrix":
+        csr = m.tocsr()
+        csr.sum_duplicates()
+        coo = csr.tocoo()
+        return cls(
+            csr=csr,
+            data=jnp.asarray(coo.data, dtype=dtype),
+            cols=jnp.asarray(coo.col, dtype=jnp.int32),
+            rows=jnp.asarray(coo.row, dtype=jnp.int32),
+            n=csr.shape[0],
+        )
+
+    def matvec(self, x):
+        """SpMV y = A x on device; x flat (n,)."""
+        contrib = self.data * x[self.cols]
+        return jax.ops.segment_sum(contrib, self.rows, num_segments=self.n)
+
+    @property
+    def nnz(self) -> int:
+        return self.csr.nnz
+
+    def memory_bytes(self) -> int:
+        # CSR: data (8B) + col idx (4B) per nnz + row ptr.
+        return self.nnz * 12 + (self.n + 1) * 4
+
+
+def assemble_sparse(
+    space: H1Space,
+    qdata: QuadratureData,
+    materials: dict[int, tuple[float, float]],
+    ess_mask: np.ndarray | None = None,
+    dtype=jnp.float64,
+) -> SparseMatrix:
+    """Assemble the global sparse stiffness matrix (vdof = 3*node + comp).
+
+    With ``ess_mask`` the essential rows/cols are eliminated symmetrically
+    (row/col zeroed, unit diagonal) — the assembled analog of
+    ConstrainedOperator.
+    """
+    p = space.p
+    jinv = np.asarray(qdata.jinv, dtype=np.float64)
+    detj = qdata.detj
+    kmats = {
+        a: element_matrix(p, jinv, detj, lam, mu) for a, (lam, mu) in materials.items()
+    }
+    gid = space.gather_ids.reshape(space.nelem, -1)  # (ne, nd) node ids
+    attr = space.mesh.attributes()
+    nd = gid.shape[1]
+    vdofs = (3 * gid[:, :, None] + np.arange(3)[None, None, :]).reshape(
+        space.nelem, 3 * nd
+    )
+
+    blocks = np.empty((space.nelem, 3 * nd, 3 * nd))
+    for a, K in kmats.items():
+        blocks[attr == a] = K
+
+    rows = np.repeat(vdofs, 3 * nd, axis=1).reshape(-1)
+    cols = np.tile(vdofs, (1, 3 * nd)).reshape(-1)
+    n = 3 * space.nscalar
+    A = sp.coo_matrix((blocks.reshape(-1), (rows, cols)), shape=(n, n)).tocsr()
+    A.sum_duplicates()
+
+    if ess_mask is not None:
+        ess = np.flatnonzero(ess_mask.reshape(-1))
+        keep = np.ones(n, dtype=bool)
+        keep[ess] = False
+        D = sp.diags(keep.astype(np.float64))
+        A = D @ A @ D + sp.diags((~keep).astype(np.float64))
+        A = A.tocsr()
+        A.eliminate_zeros()
+    return SparseMatrix.from_scipy(A, dtype=dtype)
+
+
+def fa_memory_bytes(space: H1Space) -> int:
+    """Analytic FA storage estimate: each scalar row couples to
+    O((p+1)^d) neighbours (paper Sec. 2.2.1)."""
+    p = space.p
+    per_row = 3 * (2 * p + 1) ** 3  # interior-node stencil width, vdim 3
+    return space.ndof * per_row * 12

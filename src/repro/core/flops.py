@@ -1,0 +1,28 @@
+"""Analytic FLOP counts for the elasticity operator (paper Table 5)."""
+
+from __future__ import annotations
+
+__all__ = ["paop_flops_per_elem", "dense_flops_per_elem"]
+
+
+def paop_flops_per_elem(p: int) -> float:
+    """Closed-form multiply+add count of the PAop kernel per element
+    (d=3 vector elasticity; forward + pointwise Voigt + backward)."""
+    D, Q = p + 1, p + 2
+    fwd = 3 * 2 * (
+        2 * (Q * D * D * D)     # X contraction: u, v channels
+        + 3 * (Q * Q * D * D)   # Y: d_xi, d_eta, u_xy
+        + 3 * (Q * Q * Q * D)   # Z
+    )
+    geom = 2 * 9 * Q**3 * 2     # J^-T pullback, forward + backward
+    stress = 24 * Q**3          # structured Voigt arithmetic (Sec. 4.3)
+    bwd = 3 * 2 * (
+        3 * (Q * Q * Q * D) + 3 * (Q * Q * D * D) + 3 * (Q * D * D * D)
+    )
+    return float(fwd + geom + stress + bwd)
+
+
+def dense_flops_per_elem(p: int) -> float:
+    """Dense G3D contraction cost (the MFEM v4.8 baseline's O((p+1)^6))."""
+    D, Q = p + 1, p + 2
+    return float(2 * 2 * (3 * D**3) * (3 * 3 * Q**3))

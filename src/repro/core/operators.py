@@ -1,0 +1,145 @@
+"""ElasticityOperator: the paper's contribution as a composable module.
+
+One operator object per (mesh, degree) pair exposes every assembly level
+of the ablation (Table 7) behind a single interface consumed by the
+solvers:
+
+    assembly in {"fa", "pa_baseline", "pa_sumfact", "pa_sumfact_voigt",
+                 "paop", "paop_pallas"}
+
+``apply(x)`` acts on the unconstrained L-vector (nscalar, 3);
+``constrained()`` wraps it with MFEM ConstrainedOperator semantics and
+the matrix-free diagonal for the Chebyshev-Jacobi smoother.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import diagonal as _diag
+from repro.core import fa as _fa
+from repro.core import pa_baseline as _base
+from repro.core import pa_sumfact as _sf
+from repro.core import paop as _paop
+from repro.core.basis import basis_tables
+from repro.core.geometry import MATERIALS_BEAM, make_quadrature_data
+from repro.fem.bc import ConstrainedOperator
+from repro.fem.space import H1Space
+
+__all__ = ["ElasticityOperator", "ASSEMBLY_LEVELS"]
+
+ASSEMBLY_LEVELS = (
+    "fa",
+    "pa_baseline",
+    "pa_sumfact",
+    "pa_sumfact_voigt",
+    "paop",
+    "paop_pallas",
+)
+
+
+class ElasticityOperator:
+    def __init__(
+        self,
+        space: H1Space,
+        assembly: str = "paop",
+        materials: dict[int, tuple[float, float]] | None = None,
+        dtype=jnp.float64,
+        ess_faces=("x0",),
+        pallas_interpret: bool = True,
+    ):
+        if assembly not in ASSEMBLY_LEVELS:
+            raise ValueError(f"unknown assembly level {assembly!r}")
+        self.space = space
+        self.assembly = assembly
+        self.dtype = dtype
+        self.materials = materials or MATERIALS_BEAM
+        self.tables = space.tables
+        self._pallas_interpret = pallas_interpret
+
+        qd = make_quadrature_data(space.mesh, self.tables, self.materials)
+        self.lam_w = jnp.asarray(qd.lambda_w, dtype=dtype)
+        self.mu_w = jnp.asarray(qd.mu_w, dtype=dtype)
+        self.jinv = jnp.asarray(qd.jinv, dtype=dtype)
+        self.detj = qd.detj
+        self.B = jnp.asarray(self.tables.B, dtype=dtype)
+        self.G = jnp.asarray(self.tables.G, dtype=dtype)
+        self.ess_mask = space.essential_mask(ess_faces)
+
+        self._sparse: _fa.SparseMatrix | None = None
+        if assembly == "fa":
+            qd64 = qd  # setup in float64 regardless of operator dtype
+            self._sparse = _fa.assemble_sparse(
+                space, qd64, self.materials, ess_mask=None, dtype=dtype
+            )
+
+    # -- raw action ---------------------------------------------------------
+    def _apply_evec(self, x_e):
+        a = self.assembly
+        if a == "pa_baseline":
+            g3d = _base.dense_grad_table(self.space.p, dtype=self.dtype)
+            return _base.pa_baseline_apply(x_e, self.lam_w, self.mu_w, self.jinv, g3d)
+        if a == "pa_sumfact":
+            return _sf.pa_sumfact_apply(
+                x_e, self.lam_w, self.mu_w, self.jinv, self.B, self.G
+            )
+        if a == "pa_sumfact_voigt":
+            return _sf.pa_sumfact_voigt_apply(
+                x_e, self.lam_w, self.mu_w, self.jinv, self.B, self.G
+            )
+        if a == "paop":
+            return _paop.paop_apply(
+                x_e, self.lam_w, self.mu_w, self.jinv, self.B, self.G
+            )
+        if a == "paop_pallas":
+            from repro.kernels.pa_elasticity import ops as _kops
+
+            return _kops.pa_elasticity(
+                x_e,
+                self.lam_w,
+                self.mu_w,
+                self.jinv,
+                self.B,
+                self.G,
+                interpret=self._pallas_interpret,
+            )
+        raise AssertionError(a)
+
+    def apply(self, x):
+        """Unconstrained y = A x on the L-vector (nscalar, 3)."""
+        if self.assembly == "fa":
+            y = self._sparse.matvec(x.reshape(-1))
+            return y.reshape(x.shape)
+        x_e = self.space.to_evec(x)
+        y_e = self._apply_evec(x_e)
+        return self.space.scatter_add(y_e)
+
+    def __call__(self, x):
+        return self.apply(x)
+
+    # -- diagonal -------------------------------------------------------------
+    def diagonal(self):
+        """Assembled operator diagonal as an L-vector (nscalar, 3)."""
+        if self.assembly == "fa":
+            d = jnp.asarray(self._sparse.csr.diagonal(), dtype=self.dtype)
+            return d.reshape(-1, 3)
+        d_e = _diag.element_diagonal(self.lam_w, self.mu_w, self.jinv, self.B, self.G)
+        return self.space.scatter_add(d_e)
+
+    # -- constrained view -------------------------------------------------------
+    def constrained(self) -> ConstrainedOperator:
+        return ConstrainedOperator(self.apply, self.ess_mask, self.diagonal)
+
+    # -- introspection ------------------------------------------------------------
+    def memory_bytes(self) -> int:
+        """Stored-operator footprint: quadrature data D for PA levels, CSR
+        for FA (paper Fig. 4 peak-memory comparison)."""
+        if self.assembly == "fa":
+            return self._sparse.memory_bytes()
+        itemsize = jnp.dtype(self.dtype).itemsize
+        return int(self.lam_w.size + self.mu_w.size + self.jinv.size) * itemsize

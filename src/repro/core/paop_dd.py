@@ -1,0 +1,180 @@
+"""Domain-decomposed PAop AddMult: shard_map + nearest-neighbour halo
+exchange (the beyond-paper distribution optimization).
+
+The baseline dry-run cell lets GSPMD distribute the operator: elements
+are sharded, but the L-vector interface is replicated, so every AddMult
+ends in an all-reduce of the FULL L-vector (~200 MB at 51M DoFs) — the
+collective term dominates the roofline by ~65x over the memory term.
+
+This module makes the structured-mesh locality explicit instead: a 2D
+(x, y) pencil decomposition of the element grid under ``jax.shard_map``.
+Each shard owns a contiguous element block plus the overlapping node
+planes; after the local fused PAop apply + local scatter, only the
+*shared boundary node planes* are exchanged, with two bidirectional
+``ppermute`` (collective_permute) rounds — x first, then y, which also
+completes the corner sums.  Inter-device traffic per AddMult drops from
+O(ndof) to O(boundary) — the classic owner-computes halo pattern on
+TPU-native nearest-neighbour ICI.
+
+The DD block format carries consistent (duplicated) values on shared
+planes; ``to_blocks``/``from_blocks`` convert at the boundary of the
+hot loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.basis import basis_tables
+from repro.core.geometry import MATERIALS_BEAM, make_quadrature_data
+from repro.core.paop import paop_apply
+from repro.fem.mesh import HexMesh
+from repro.fem.space import H1Space
+
+__all__ = ["SlabDecomposition", "choose_grid"]
+
+
+def choose_grid(nx: int, ny: int, n_shards: int) -> tuple[int, int]:
+    """(gx, gy) with gx*gy == n_shards, gx | nx, gy | ny; prefers square-ish."""
+    best = None
+    for gx in range(1, n_shards + 1):
+        if n_shards % gx or nx % gx:
+            continue
+        gy = n_shards // gx
+        if ny % gy:
+            continue
+        score = abs(np.log(gx / gy))
+        if best is None or score < best[0]:
+            best = (score, gx, gy)
+    if best is None:
+        raise ValueError(f"no (gx, gy) grid for nx={nx} ny={ny} n={n_shards}")
+    return best[1], best[2]
+
+
+@dataclasses.dataclass
+class SlabDecomposition:
+    """2D-pencil DD of the PAop operator on a structured beam mesh."""
+
+    space: H1Space
+    mesh: jax.sharding.Mesh
+    axes: tuple[str, ...]  # mesh axes flattened into the shard axis
+    dtype: object = jnp.float32
+    materials: dict | None = None
+
+    def __post_init__(self):
+        sp = self.space
+        m = sp.mesh
+        self.n_shards = int(np.prod([self.mesh.shape[a] for a in self.axes]))
+        self.gx, self.gy = choose_grid(m.nx, m.ny, self.n_shards)
+        self.bx, self.by = m.nx // self.gx, m.ny // self.gy
+        p = sp.p
+        self.lnx, self.lny, self.lnz = self.bx * p + 1, self.by * p + 1, m.nz * p + 1
+
+        # local structured space (identical on every shard)
+        self.local_space = H1Space(HexMesh(self.bx, self.by, m.nz), p)
+        self.local_gather = jnp.asarray(self.local_space.gather_ids)
+
+        # global<->block node index map: (n_shards, local_nscalar)
+        Nx, Ny, Nz = sp.node_grid
+        ids = []
+        for s in range(self.n_shards):
+            sx, sy = divmod(s, self.gy)
+            ix = np.arange(self.lnx) + sx * self.bx * p
+            iy = np.arange(self.lny) + sy * self.by * p
+            iz = np.arange(self.lnz)
+            IZ, IY, IX = np.meshgrid(iz, iy, ix, indexing="ij")
+            ids.append((IX + Nx * (IY + Ny * IZ)).reshape(-1))
+        self.block_ids = np.stack(ids)  # (n_shards, LN)
+
+        # per-shard element ids -> quadrature data blocks
+        tb = basis_tables(p)
+        qd = make_quadrature_data(m, tb, self.materials or MATERIALS_BEAM)
+        eids = []
+        for s in range(self.n_shards):
+            sx, sy = divmod(s, self.gy)
+            ex = np.arange(self.bx) + sx * self.bx
+            ey = np.arange(self.by) + sy * self.by
+            ez = np.arange(m.nz)
+            EZ, EY, EX = np.meshgrid(ez, ey, ex, indexing="ij")
+            eids.append((EX + m.nx * (EY + m.ny * EZ)).reshape(-1))
+        eids = np.stack(eids)  # (n_shards, lne)
+        self.lam_blocks = jnp.asarray(
+            np.asarray(qd.lambda_w)[eids], dtype=self.dtype)
+        self.mu_blocks = jnp.asarray(
+            np.asarray(qd.mu_w)[eids], dtype=self.dtype)
+        assert qd.jinv.ndim == 2, "DD path assumes the uniform affine beam"
+        self.jinv = jnp.asarray(qd.jinv, dtype=self.dtype)
+        self.B = jnp.asarray(tb.B, dtype=self.dtype)
+        self.G = jnp.asarray(tb.G, dtype=self.dtype)
+
+        self._shard_spec = P((*self.axes,))
+
+    # -- format conversion (outside the hot loop) ---------------------------
+    def to_blocks(self, x):
+        """(nscalar, 3) -> (n_shards, LN, 3) overlapping node blocks."""
+        return x[jnp.asarray(self.block_ids)]
+
+    def from_blocks(self, xb):
+        """Inverse of to_blocks (shared planes carry identical values)."""
+        out = jnp.zeros((self.space.nscalar, 3), xb.dtype)
+        return out.at[jnp.asarray(self.block_ids).reshape(-1)].set(
+            xb.reshape(-1, 3)
+        )
+
+    # -- the DD AddMult -------------------------------------------------------
+    def apply_blocks(self, xb):
+        """y_blocks = A x_blocks with halo exchange (shard_map)."""
+        gx, gy = self.gx, self.gy
+        lnx, lny, lnz = self.lnx, self.lny, self.lnz
+        gather = self.local_gather
+        jinv, B, G = self.jinv, self.B, self.G
+        axes = self.axes
+
+        fwd_x = [(sx * gy + sy, (sx + 1) * gy + sy)
+                 for sx in range(gx - 1) for sy in range(gy)]
+        bwd_x = [(b, a) for a, b in fwd_x]
+        fwd_y = [(sx * gy + sy, sx * gy + sy + 1)
+                 for sx in range(gx) for sy in range(gy - 1)]
+        bwd_y = [(b, a) for a, b in fwd_y]
+
+        def body(xb, lam, mu):
+            x = xb[0]  # (LN, 3)
+            x_e = jnp.moveaxis(x[gather], -1, 1)  # (lne, 3, D,D,D)
+            y_e = paop_apply(x_e, lam[0], mu[0], jinv, B, G)
+            yflat = jnp.moveaxis(y_e, 1, -1).reshape(-1, 3)
+            y = jax.ops.segment_sum(
+                yflat, gather.reshape(-1), num_segments=lnx * lny * lnz
+            )
+            y3 = y.reshape(lnz, lny, lnx, 3)
+
+            # x-direction halo: both copies of each shared x-plane add the
+            # neighbour's partial sum (non-paired shards receive zeros).
+            hi_x = jax.lax.ppermute(y3[:, :, -1, :], axes, fwd_x)
+            lo_x = jax.lax.ppermute(y3[:, :, 0, :], axes, bwd_x)
+            y3 = y3.at[:, :, 0, :].add(hi_x).at[:, :, -1, :].add(lo_x)
+
+            # y-direction halo (after x: corner nodes complete transitively)
+            if gy > 1:
+                hi_y = jax.lax.ppermute(y3[:, -1, :, :], axes, fwd_y)
+                lo_y = jax.lax.ppermute(y3[:, 0, :, :], axes, bwd_y)
+                y3 = y3.at[:, 0, :, :].add(hi_y).at[:, -1, :, :].add(lo_y)
+            return y3.reshape(1, -1, 3)
+
+        fn = jax.shard_map(
+            body,
+            mesh=self.mesh,
+            in_specs=(self._shard_spec, self._shard_spec, self._shard_spec),
+            out_specs=self._shard_spec,
+            check_vma=False,
+        )
+        return fn(xb, self.lam_blocks, self.mu_blocks)
+
+    def apply(self, x):
+        """Global-interface convenience wrapper (block roundtrip)."""
+        return self.from_blocks(self.apply_blocks(self.to_blocks(x)))

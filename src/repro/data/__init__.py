@@ -1,0 +1,1 @@
+from repro.data.pipeline import TokenPipeline, batch_spec, make_batch  # noqa: F401

@@ -1,0 +1,6 @@
+from repro.distributed.sharding import (  # noqa: F401
+    batch_pspec,
+    param_pspecs,
+    state_pspecs,
+    decode_state_pspecs,
+)

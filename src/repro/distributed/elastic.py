@@ -1,0 +1,119 @@
+"""Elastic scaling + failure handling for the training loop.
+
+The recovery model is checkpoint-based (the standard for TPU pods, where
+a failed host takes down its slice): on any fault the job restarts from
+the last complete checkpoint, possibly on a *different* device count.
+
+* :func:`elastic_remesh` — build the largest valid (data, model) mesh
+  for whatever devices are alive, preserving the model-axis size when
+  possible (TP degree is architecture-bound; DP degree is the elastic
+  dimension).  Because the data pipeline is stateless-deterministic and
+  keyed by *global row id* (repro.data.pipeline), changing the DP degree
+  re-partitions the same global batch — training is bit-reproducible
+  across rescales at fixed global batch size.
+* :func:`reshard_state` — move a restored TrainState onto a new mesh by
+  re-applying the sharding rules (jax.device_put with the new
+  NamedSharding tree).
+* :class:`StepWatchdog` — straggler/hang mitigation: a monitor thread
+  that fires a callback when a step exceeds ``timeout`` (at pod scale
+  the callback escalates to the cluster manager to evict the straggler;
+  here it records and optionally raises).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+__all__ = ["elastic_remesh", "reshard_state", "StepWatchdog", "simulate_failures"]
+
+
+def elastic_remesh(
+    devices=None, *, model_parallel: int = 16, axis_names=("data", "model")
+) -> Mesh:
+    """Largest (data, model) mesh over the alive devices.
+
+    Keeps the model axis at ``model_parallel`` if the device count
+    allows, else falls back to the largest power-of-two divisor — the
+    params must still fit per-device, so shrinking TP is the last
+    resort.  Drops stragglers beyond the largest usable rectangle.
+    """
+    devices = list(devices if devices is not None else jax.devices())
+    n = len(devices)
+    mp = model_parallel
+    while mp > 1 and n // mp == 0:
+        mp //= 2
+    dp = n // mp
+    if dp == 0:
+        raise RuntimeError(f"not enough devices ({n}) for any mesh")
+    used = devices[: dp * mp]
+    import numpy as np
+
+    arr = np.array(used).reshape(dp, mp)
+    return Mesh(arr, axis_names)
+
+
+def reshard_state(state, pspecs, mesh: Mesh):
+    """Place (possibly host-resident, possibly differently-sharded) state
+    onto ``mesh`` according to ``pspecs``."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), state, pspecs
+    )
+
+
+def simulate_failures(devices, n_failed: int):
+    """Drop the last ``n_failed`` devices (test hook for elastic logic)."""
+    if n_failed >= len(devices):
+        raise ValueError("cannot fail every device")
+    return devices[: len(devices) - n_failed]
+
+
+class StepWatchdog:
+    """Detects hung/straggling steps.
+
+    Usage::
+
+        wd = StepWatchdog(timeout_s=300, on_timeout=escalate)
+        for batch in data:
+            with wd.step():
+                state, metrics = train_step(state, batch)
+    """
+
+    def __init__(self, timeout_s: float, on_timeout: Callable[[float], None] | None = None):
+        self.timeout_s = timeout_s
+        self.on_timeout = on_timeout
+        self.timeouts = 0
+        self.slowest = 0.0
+
+    class _StepCtx:
+        def __init__(self, wd: "StepWatchdog"):
+            self.wd = wd
+            self._fired = threading.Event()
+            self._done = threading.Event()
+
+        def __enter__(self):
+            self.t0 = time.perf_counter()
+
+            def monitor():
+                if not self._done.wait(self.wd.timeout_s):
+                    self._fired.set()
+                    self.wd.timeouts += 1
+                    if self.wd.on_timeout:
+                        self.wd.on_timeout(time.perf_counter() - self.t0)
+
+            self._thread = threading.Thread(target=monitor, daemon=True)
+            self._thread.start()
+            return self
+
+        def __exit__(self, *exc):
+            self._done.set()
+            self._thread.join(timeout=1.0)
+            self.wd.slowest = max(self.wd.slowest, time.perf_counter() - self.t0)
+            return False
+
+    def step(self) -> "_StepCtx":
+        return self._StepCtx(self)

@@ -1,0 +1,4 @@
+from repro.fem.mesh import HexMesh, beam_hex
+from repro.fem.space import H1Space
+
+__all__ = ["HexMesh", "beam_hex", "H1Space"]

@@ -1,0 +1,53 @@
+"""Essential (Dirichlet) boundary-condition handling.
+
+Mirrors MFEM's ``ConstrainedOperator`` semantics used by all assembly
+levels: given the unconstrained operator action A and the set of essential
+DoFs E,
+
+    y = A (x with x_E zeroed);   y_E = x_E
+
+which keeps the constrained operator symmetric positive-definite with a
+unit diagonal block on E.  RHS elimination for inhomogeneous data is
+``b <- b - A x_bc`` followed by ``b_E <- x_bc_E`` (homogeneous in the
+paper's benchmark, but implemented generally).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["ConstrainedOperator", "eliminate_rhs"]
+
+
+class ConstrainedOperator:
+    """Wraps ``apply(x) -> y`` with MFEM ConstrainedOperator semantics."""
+
+    def __init__(self, apply_fn, ess_mask, diagonal_fn=None):
+        self._apply = apply_fn
+        # bool (nscalar, vdim); stored as the operator dtype at call time.
+        self.ess_mask = jnp.asarray(ess_mask)
+        self._diagonal_fn = diagonal_fn
+
+    def __call__(self, x):
+        m = self.ess_mask
+        xi = jnp.where(m, 0.0, x)
+        y = self._apply(xi)
+        return jnp.where(m, x, y)
+
+    def diagonal(self):
+        """Operator diagonal with ones on constrained DoFs (what MFEM's
+        AssembleDiagonal + ConstrainedOperator produce for the smoother)."""
+        if self._diagonal_fn is None:
+            raise ValueError("no diagonal_fn provided")
+        d = self._diagonal_fn()
+        return jnp.where(self.ess_mask, jnp.ones_like(d), d)
+
+
+def eliminate_rhs(apply_fn, ess_mask, b, x_bc=None):
+    """Form the reduced RHS for essential BCs (x_bc defaults to zero)."""
+    m = jnp.asarray(ess_mask)
+    if x_bc is None:
+        return jnp.where(m, 0.0, b)
+    xb = jnp.where(m, x_bc, 0.0)
+    b2 = b - apply_fn(xb)
+    return jnp.where(m, xb, b2)

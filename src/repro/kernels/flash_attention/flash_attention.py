@@ -1,0 +1,160 @@
+"""Fused causal GQA flash-attention kernel (Pallas, TPU target).
+
+The paper's macro-kernel-fusion insight — eliminate the operator-wide
+intermediate round trip through main memory — applied to attention: the
+(S x S) score matrix never exists in HBM.  Online softmax carries the
+running (max, sum, acc) across KV blocks inside VMEM.
+
+TPU adaptation notes (vs. the CUDA flash-attention dataflow):
+
+* Grid = (batch*kv_head, q_blocks, kv_blocks) with the KV block as the
+  *innermost* (fastest) grid axis: on TPU the grid is executed
+  sequentially per core, so the running softmax state lives in VMEM
+  scratch across the kv-block sweep of one q-block — the analogue of a
+  CUDA thread block's shared-memory accumulator, but made explicit via
+  ``pl.when`` epilogue at the last kv step.
+* The query block carries the G = H/K grouped heads folded into the row
+  dimension ((G*Bq, D) tiles): GQA shares each loaded KV block across
+  the whole query group for free, keeping the MXU minor dims at 128.
+* Causality is handled at block granularity: whole blocks strictly
+  above the diagonal are masked via a large-negative fill (the wrapper
+  skips them entirely when ``block_skip`` — see ops.py); the diagonal
+  block uses an elementwise iota mask.  Optional sliding window adds
+  the symmetric lower cut.
+
+Validated in interpret mode against ref.flash_ref (tests/test_flash_kernel.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, block_q, block_k, n_kv_blocks, window):
+    """One (bk-step) of the online-softmax sweep for one q block.
+
+    q_ref: (G*Bq, D); k_ref/v_ref: (Bk, D); o_ref: (G*Bq, D)
+    scratch: m/l (G*Bq, 1) f32, acc (G*Bq, D) f32 — persist across the
+    kv grid axis (sequential on TPU).
+    """
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    gbq = q.shape[0]
+    g = gbq // block_q
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (G*Bq, Bk)
+
+    # causal / window mask on absolute positions
+    rows = jax.lax.broadcasted_iota(jnp.int32, (gbq, k.shape[0]), 0)
+    qpos = qi * block_q + rows % block_q  # fold G out of the row index
+    kpos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (gbq, k.shape[0]), 1
+    )
+    mask = qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    # mask-aware exp: a fully-masked block would otherwise see
+    # exp(NEG_INF - NEG_INF) = 1 (windowed sweeps hit this before the
+    # first in-window block).
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _epilogue():
+        l_safe = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[...] = (acc_scr[...] / l_safe).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_q", "block_k", "window", "interpret"),
+)
+def flash_attention_pallas(q, k, v, *, block_q=128, block_k=128,
+                           window=None, interpret=True):
+    """q (B, S, H, D); k/v (B, S, K, D), H = K*G. Causal. Returns like q.
+
+    Layout into the kernel: q -> (B*K, S*G?, ...) — we arrange
+    (B*K, n_q_blocks) grid with a (G*Bq, D) query tile so each KV head's
+    group shares its KV stream.
+    """
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    nq = S // block_q
+    nk = S // block_k
+    scale = 1.0 / (D ** 0.5)
+
+    # (B, S, K, G, D) -> (B*K, nq, G*Bq, D): fold G into the q-block rows.
+    qr = (
+        q.reshape(B, nq, block_q, K, G, D)
+        .transpose(0, 3, 1, 4, 2, 5)
+        .reshape(B * K, nq, G * block_q, D)
+    )
+    kr = k.transpose(0, 2, 1, 3).reshape(B * K, S, D)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * K, S, D)
+
+    grid = (B * K, nq, nk)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel,
+            scale=scale,
+            block_q=block_q,
+            block_k=block_k,
+            n_kv_blocks=nk,
+            window=window,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, G * block_q, D), lambda b, i, j: (b, i, 0, 0)),
+            pl.BlockSpec((None, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((None, block_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (None, None, G * block_q, D), lambda b, i, j: (b, i, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B * K, nq, G * block_q, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G * block_q, 1), jnp.float32),
+            pltpu.VMEM((G * block_q, 1), jnp.float32),
+            pltpu.VMEM((G * block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+
+    # back to (B, S, H, D)
+    out = out.reshape(B, K, nq, G, block_q, D).transpose(0, 2, 4, 1, 3, 5)
+    return out.reshape(B, S, H, D)

@@ -1,0 +1,35 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+Handles block-size selection (S-divisible, lane-aligned), dtype, and the
+fallback to the reference for shapes the kernel doesn't tile (tiny S).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_ref
+
+__all__ = ["flash_attention", "pick_block"]
+
+
+def pick_block(S: int, target: int = 128) -> int:
+    """Largest divisor of S that is <= target (lane-aligned when possible)."""
+    b = min(target, S)
+    while S % b:
+        b -= 1
+    return b
+
+
+def flash_attention(q, k, v, *, window=None, block_q=None, block_k=None,
+                    interpret=True):
+    """Causal GQA attention, fused. q (B,S,H,D); k/v (B,S,K,D)."""
+    B, S, H, D = q.shape
+    bq = block_q or pick_block(S)
+    bk = block_k or pick_block(S)
+    if S < 8:  # not worth tiling; keep the oracle path
+        return flash_ref(q, k, v, window=window)
+    return flash_attention_pallas(
+        q, k, v, block_q=bq, block_k=bk, window=window, interpret=interpret
+    )

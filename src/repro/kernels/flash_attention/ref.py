@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the flash-attention kernel: materialized causal
+(optionally sliding-window) GQA attention in float32."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def flash_ref(q, k, v, *, window=None):
+    """q (B, S, H, D); k/v (B, S, K, D) with H = K * G. Returns (B, S, H, D).
+
+    Causal mask; optional sliding window (positions within [i-window+1, i]).
+    Computed in f32, returned in q.dtype.
+    """
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    qf = q.astype(jnp.float32).reshape(B, S, K, G, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kf) / jnp.sqrt(jnp.float32(D))
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, vf)
+    return o.reshape(B, S, H, D).astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.pa_elasticity.ops import pa_elasticity
+
+__all__ = ["pa_elasticity"]

@@ -1,0 +1,85 @@
+"""jit'd public wrapper for the PAop Pallas kernel.
+
+Handles layout (framework element-first <-> kernel element-last),
+padding to a whole number of element blocks, and the VMEM-budgeted
+choice of elements-per-block (the TPU analog of the paper's slice-wise
+working-set bound).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.pa_elasticity.pa_elasticity import pa_elasticity_pallas
+
+__all__ = ["pa_elasticity", "elements_per_block", "block_workingset_bytes"]
+
+# Target VMEM footprint per grid step. Real v5e VMEM is ~16 MB; leave
+# headroom for double-buffered input/output blocks.
+VMEM_BUDGET_BYTES = 8 * 2 ** 20
+_LANE = 128  # TPU lane width: EB should be a multiple when possible.
+
+
+def block_workingset_bytes(p: int, eb: int, itemsize: int = 4) -> int:
+    """Working set of one grid step: x/y blocks, lambda/mu blocks, the
+    reference gradient (9 ch), Voigt stress (6 ch) and pullback rows
+    (3 ch live at a time) at quadrature resolution."""
+    d1, q1 = p + 1, p + 2
+    per_elem = (
+        2 * 3 * d1 ** 3  # x, y
+        + 2 * q1 ** 3  # lambda_w, mu_w
+        + 9 * q1 ** 3  # ghat / grad
+        + 6 * q1 ** 3  # voigt stress
+        + 3 * q1 ** 3  # per-output-component pullback rows
+    )
+    return per_elem * eb * itemsize
+
+
+def elements_per_block(p: int, ne: int, itemsize: int = 4) -> int:
+    """Largest lane-aligned EB whose working set fits the VMEM budget."""
+    eb = _LANE
+    while block_workingset_bytes(p, 2 * eb, itemsize) <= VMEM_BUDGET_BYTES:
+        eb *= 2
+    while eb > 8 and block_workingset_bytes(p, eb, itemsize) > VMEM_BUDGET_BYTES:
+        eb //= 2
+    return min(eb, max(8, ne))
+
+
+def pa_elasticity(x_e, lam_w, mu_w, jinv, B, G, *, eb=None, interpret=True):
+    """Fused PAop operator action.
+
+    x_e:    (nelem, 3, D1D, D1D, D1D)  framework layout
+    lam_w:  (nelem, Q1D, Q1D, Q1D)     (mu_w likewise)
+    jinv:   (3, 3) mesh-constant affine J^{-1}
+    B, G:   (Q1D, D1D)
+    Returns y_e in the same layout as x_e.
+    """
+    if jinv.ndim != 2:
+        raise ValueError(
+            "pa_elasticity kernel assumes a mesh-constant affine J^{-1}; "
+            "use repro.core.paop.paop_apply for per-element geometry"
+        )
+    ne = x_e.shape[0]
+    d1d = x_e.shape[-1]
+    q1d = lam_w.shape[-1]
+    p = d1d - 1
+    itemsize = jnp.dtype(x_e.dtype).itemsize
+    if eb is None:
+        eb = elements_per_block(p, ne, itemsize)
+    eb = min(eb, ne) if ne % min(eb, ne) == 0 else eb
+
+    pad = (-ne) % eb
+    xt = jnp.moveaxis(x_e, 0, -1)  # (3, D, D, D, NE)
+    lt = jnp.moveaxis(lam_w, 0, -1)
+    mt = jnp.moveaxis(mu_w, 0, -1)
+    if pad:
+        xt = jnp.pad(xt, [(0, 0)] * 4 + [(0, pad)])
+        lt = jnp.pad(lt, [(0, 0)] * 3 + [(0, pad)])
+        mt = jnp.pad(mt, [(0, 0)] * 3 + [(0, pad)])
+
+    yt = pa_elasticity_pallas(
+        xt, lt, mt, jinv, B, G, d1d=d1d, q1d=q1d, eb=eb, interpret=interpret
+    )
+    if pad:
+        yt = yt[..., :ne]
+    return jnp.moveaxis(yt, -1, 0)

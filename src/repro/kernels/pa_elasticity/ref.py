@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the PAop Pallas kernel.
+
+Same math as :mod:`repro.core.paop` (which is itself validated against
+full assembly); re-exposed here in the kernel's calling convention so the
+kernel tests read as kernel-vs-oracle.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.paop import paop_apply
+
+__all__ = ["paop_ref"]
+
+
+def paop_ref(x_e, lam_w, mu_w, jinv, B, G):
+    """x_e: (nelem, 3, D1D, D1D, D1D) element-first framework layout."""
+    return paop_apply(x_e, lam_w, mu_w, jinv, B, G)

@@ -1,0 +1,345 @@
+"""Dry-run cell construction: (architecture x input-shape x mesh) ->
+(jittable fn, abstract args, shardings).
+
+A *cell* is one entry of the assignment matrix.  LM cells lower
+``train_step`` (train shapes), ``prefill`` (prefill shapes) or
+``decode_step`` (decode shapes).  Elasticity cells lower the paper's
+AddMult operator (optionally at a chosen ablation assembly level) on the
+beam problem at the paper's problem scales.
+
+Everything here is allocation-free: parameters, optimizer state, decode
+caches and batches are ``jax.eval_shape`` / ShapeDtypeStruct stand-ins.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, get_config
+from repro.configs.elasticity import ELASTICITY_SHAPES
+from repro.core import flops as _fl
+from repro.data.pipeline import batch_spec
+from repro.distributed.sharding import (
+    act_pspec,
+    batch_pspec,
+    decode_state_pspecs,
+    param_pspecs,
+    state_pspecs,
+)
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import train_state_init, make_train_step
+
+__all__ = ["build_cell", "cell_ids", "Cell", "skip_reason"]
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    fn: Callable
+    args: tuple  # abstract (ShapeDtypeStruct) args
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: tuple = ()
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def lower(self, mesh=None):
+        jitted = jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+            donate_argnums=self.donate_argnums,
+        )
+        return jitted.lower(*self.args)
+
+
+def skip_reason(arch: str, shape: str) -> str | None:
+    """Assignment skip rules: long_500k only for sub-quadratic archs."""
+    if arch == "elasticity":
+        return None
+    if shape == "long_500k":
+        cfg = get_config(arch)
+        if not cfg.sub_quadratic:
+            return (
+                "full-attention arch: 500k dense decode is quadratic-cost "
+                "KV attention; skipped per assignment (see DESIGN.md)"
+            )
+    return None
+
+
+def cell_ids(include_elasticity: bool = True) -> list[tuple[str, str]]:
+    from repro.configs.base import ARCH_IDS
+
+    out = []
+    for arch in ARCH_IDS:
+        if arch == "elasticity":
+            if include_elasticity:
+                out += [("elasticity", s) for s in ELASTICITY_SHAPES]
+            continue
+        out += [(arch, s) for s in SHAPES if skip_reason(arch, s) is None]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+def _shardings(mesh, tree_of_specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_of_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+SMALL_MODEL_PARAMS = int(5e8)  # below this, TP costs more than it saves
+
+
+def _train_cell(arch: str, cfg, shape, mesh) -> Cell:
+    axes = tuple(mesh.axis_names)
+    key = jax.random.PRNGKey(0)
+    state_shape = jax.eval_shape(lambda k: train_state_init(k, cfg), key)
+    bspec = batch_spec(cfg, shape)
+
+    # Models too small to amortize 16-way tensor parallelism (xlstm-125m:
+    # one activation all-reduce per matmul for ~0 compute saved — measured
+    # 29 GiB/dev of TP all-reduce vs 0.02 s of compute) run pure-DP: the
+    # 'model' axis becomes extra batch parallelism, params FSDP over 'data'.
+    pure_dp = cfg.n_params() < SMALL_MODEL_PARAMS
+    dp = tuple(a for a in axes if a in ("pod", "data"))
+    if pure_dp and shape.global_batch % mesh.size == 0:
+        dp = axes
+    sspec = state_pspecs(state_shape, mesh, tp=not pure_dp)
+    bpspec = jax.tree.map(
+        lambda leaf: P(dp, *(None,) * (leaf.ndim - 1)), bspec
+    ) if pure_dp else batch_pspec(axes, bspec)
+    # sequence-parallel activations for scan-over-layer families; the
+    # xlstm per-token recurrences reshard every scan step under an
+    # S-sharded layout, so they shard batch only.
+    if cfg.block_pattern == "xlstm" or pure_dp:
+        aspec = P(dp, None, None)
+    else:
+        aspec = act_pspec(axes)
+    step = make_train_step(
+        cfg,
+        AdamWConfig(),
+        remat=True,
+        attn_impl="chunked" if shape.seq_len > 1024 else "full",
+        act_spec=NamedSharding(mesh, aspec),
+        logits_spec=NamedSharding(
+            mesh, P(dp, None, None if pure_dp else "model")
+        ),
+    )
+    return Cell(
+        arch=arch,
+        shape=shape.name,
+        fn=step,
+        args=(state_shape, bspec),
+        in_shardings=(_shardings(mesh, sspec), _shardings(mesh, bpspec)),
+        out_shardings=(_shardings(mesh, sspec), None),
+        donate_argnums=(0,),
+        meta={"kind": "train", "tokens": shape.seq_len * shape.global_batch},
+    )
+
+
+def _prefill_cell(arch: str, cfg, shape, mesh) -> Cell:
+    from repro.models.transformer import prefill, init_params, init_decode_state
+
+    axes = tuple(mesh.axis_names)
+    key = jax.random.PRNGKey(0)
+    params_shape = jax.eval_shape(lambda k: init_params(k, cfg), key)
+    bspec = batch_spec(cfg, shape)
+    # labels are a training-only input
+    bspec = {k: v for k, v in bspec.items() if k != "labels"}
+
+    def fn(params, batch):
+        return prefill(
+            params, batch, cfg, max_len=shape.seq_len, attn_impl="chunked",
+            act_spec=NamedSharding(mesh, act_pspec(axes)),
+        )
+
+    pspec = param_pspecs(params_shape, mesh)
+    bpspec = batch_pspec(axes, bspec)
+    state_shape = jax.eval_shape(
+        lambda: init_decode_state(cfg, shape.global_batch, shape.seq_len)
+    )
+    stspec = decode_state_pspecs(state_shape, axes, cfg, mesh)
+    return Cell(
+        arch=arch,
+        shape=shape.name,
+        fn=fn,
+        args=(params_shape, bspec),
+        in_shardings=(_shardings(mesh, pspec), _shardings(mesh, bpspec)),
+        out_shardings=(None, _shardings(mesh, stspec)),
+        meta={"kind": "prefill", "tokens": shape.seq_len * shape.global_batch},
+    )
+
+
+def _decode_cell(arch: str, cfg, shape, mesh) -> Cell:
+    from repro.models.transformer import decode_step, init_params, init_decode_state
+
+    axes = tuple(mesh.axis_names)
+    key = jax.random.PRNGKey(0)
+    params_shape = jax.eval_shape(lambda k: init_params(k, cfg), key)
+    B = shape.global_batch
+    state_shape = jax.eval_shape(
+        lambda: init_decode_state(cfg, B, shape.seq_len)
+    )
+    tok_shape = (B, 1, cfg.n_codebooks) if cfg.n_codebooks else (B, 1)
+    tok = jax.ShapeDtypeStruct(tok_shape, jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def fn(params, token, state, pos):
+        return decode_step(params, token, state, pos, cfg)
+
+    pspec = param_pspecs(params_shape, mesh)
+    stspec = decode_state_pspecs(state_shape, axes, cfg, mesh)
+    dp = tuple(a for a in axes if a in ("pod", "data"))
+    tok_sh = NamedSharding(mesh, P(dp, None, *([None] * (len(tok_shape) - 2))))
+    if B % int(np.prod([mesh.shape[a] for a in dp])):
+        tok_sh = NamedSharding(mesh, P())  # tiny batch: replicate tokens
+        # (decode_state_pspecs already skipped the batch axis and kept the
+        # head-axis 'model' sharding for the caches)
+    return Cell(
+        arch=arch,
+        shape=shape.name,
+        fn=fn,
+        args=(params_shape, tok, state_shape, pos),
+        in_shardings=(
+            _shardings(mesh, pspec),
+            tok_sh,
+            _shardings(mesh, stspec),
+            NamedSharding(mesh, P()),
+        ),
+        out_shardings=(None, _shardings(mesh, stspec)),
+        donate_argnums=(2,),
+        meta={"kind": "decode", "tokens": shape.global_batch},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Elasticity cells (the paper's workload)
+# ---------------------------------------------------------------------------
+def _elasticity_cell(shape_name: str, mesh, assembly: str = "paop") -> Cell:
+    """AddMult on the production mesh: domain decomposition.
+
+    The L-vector has an odd DoF count (never evenly shardable), so it
+    stays replicated at the interface; the *elements* — which DO divide
+    the mesh (structured refinement gives power-of-two element counts) —
+    are sharded over every mesh axis via a constraint on the E-vector.
+    GSPMD then runs gather/physics/scatter owner-computes per shard and
+    reduces the overlapping node contributions (the halo exchange).
+    """
+    from repro.core.operators import ElasticityOperator
+    from repro.fem.mesh import beam_hex
+    from repro.fem.space import H1Space
+
+    es = ELASTICITY_SHAPES[shape_name]
+    m = beam_hex()
+    for _ in range(es.n_h_refine):
+        m = m.refined()
+    space = H1Space(m, es.p)
+    op = ElasticityOperator(space, assembly=assembly, dtype=jnp.float32)
+
+    axes = tuple(mesh.axis_names)
+    elem_axes = tuple(a for a in axes)
+    n_shards = int(np.prod([mesh.shape[a] for a in elem_axes]))
+    if space.nelem % n_shards:
+        elem_axes = elem_axes[1:]  # drop the pod/data axis if uneven
+        n_shards = int(np.prod([mesh.shape[a] for a in elem_axes]))
+    e_sh = NamedSharding(mesh, P(elem_axes, None, None, None, None))
+
+    x = jax.ShapeDtypeStruct((space.nscalar, 3), jnp.float32)
+    xsh = NamedSharding(mesh, P())  # replicated L-vector interface
+
+    def fn(v):
+        x_e = space.to_evec(v)
+        x_e = jax.lax.with_sharding_constraint(x_e, e_sh)
+        y_e = op._apply_evec(x_e)
+        return space.scatter_add(y_e)
+
+    return Cell(
+        arch="elasticity",
+        shape=f"{shape_name}" + ("" if assembly == "paop" else f":{assembly}"),
+        fn=fn,
+        args=(x,),
+        in_shardings=(xsh,),
+        out_shardings=xsh,
+        meta={
+            "kind": "addmult",
+            "assembly": assembly,
+            "ndof": space.ndof,
+            "nelem": space.nelem,
+            "p": es.p,
+            "flops_per_elem": _fl.paop_flops_per_elem(es.p)
+            if assembly.startswith("paop")
+            else _fl.dense_flops_per_elem(es.p),
+        },
+    )
+
+
+def _elasticity_dd_cell(shape_name: str, mesh) -> Cell:
+    """Domain-decomposed AddMult (shard_map halo exchange) — the
+    beyond-paper distribution optimization; compare against the GSPMD
+    baseline cell in §Perf."""
+    from repro.core.paop_dd import SlabDecomposition
+    from repro.fem.mesh import beam_hex
+    from repro.fem.space import H1Space
+
+    es = ELASTICITY_SHAPES[shape_name]
+    m = beam_hex()
+    for _ in range(es.n_h_refine):
+        m = m.refined()
+    space = H1Space(m, es.p)
+    axes = tuple(mesh.axis_names)
+    dd = SlabDecomposition(space, mesh, axes, dtype=jnp.float32)
+
+    xb = jax.ShapeDtypeStruct(
+        (dd.n_shards, dd.lnx * dd.lny * dd.lnz, 3), jnp.float32
+    )
+    bsh = NamedSharding(mesh, P((*axes,), None, None))
+    return Cell(
+        arch="elasticity",
+        shape=f"{shape_name}:dd",
+        fn=dd.apply_blocks,
+        args=(xb,),
+        in_shardings=(bsh,),
+        out_shardings=bsh,
+        meta={
+            "kind": "addmult_dd",
+            "assembly": "paop_dd",
+            "ndof": space.ndof,
+            "nelem": space.nelem,
+            "p": es.p,
+            "grid": [dd.gx, dd.gy],
+            "flops_per_elem": _fl.paop_flops_per_elem(es.p),
+        },
+    )
+
+
+# ---------------------------------------------------------------------------
+# public entry
+# ---------------------------------------------------------------------------
+def build_cell(arch: str, shape_name: str, mesh, assembly: str = "paop") -> Cell:
+    if arch == "elasticity":
+        if assembly == "paop_dd" or shape_name.endswith(":dd"):
+            return _elasticity_dd_cell(shape_name.split(":")[0], mesh)
+        return _elasticity_cell(shape_name, mesh, assembly)
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    reason = skip_reason(arch, shape_name)
+    if reason:
+        raise ValueError(f"cell ({arch}, {shape_name}) skipped: {reason}")
+    if shape.kind == "train":
+        return _train_cell(arch, cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return _prefill_cell(arch, cfg, shape, mesh)
+    if shape.kind == "decode":
+        return _decode_cell(arch, cfg, shape, mesh)
+    raise ValueError(shape.kind)

@@ -1,0 +1,184 @@
+"""Loop-aware analytic cost model over jaxprs.
+
+XLA's ``HloCostAnalysis`` (what ``compiled.cost_analysis()`` reports)
+counts a ``while`` body ONCE, so any scan-over-layers model under-reports
+flops by ~n_layers (verified empirically in this repo: an unrolled
+8-layer stack reports ~6.4x the flops of the identical scanned stack).
+This walker computes global (unsharded) flops and a traffic model
+directly from the jaxpr, multiplying scan bodies by their trip count —
+the numbers the roofline terms actually need.
+
+Conventions (documented in EXPERIMENTS.md):
+
+* flops — dot_general: 2*M*N*K (multiply-add = 2); elementwise /
+  reduction ops: one flop per output (or per input for reductions);
+  integer/bool/shape ops: 0.  Matches XLA's convention modulo fusion.
+* bytes — a *fusion-aware lower bound* of HBM traffic: only ops that
+  must touch memory count — dot_general (all operands + result),
+  gather/scatter/take/segment_sum, dynamic slicing/update, concatenate,
+  and scan xs/ys/carry streaming per iteration.  Pure elementwise chains
+  are assumed fused into their consumers (0 incremental bytes), which is
+  what XLA fusion does to them on TPU.
+* while loops with data-dependent trip counts (none in the dry-run
+  cells) count their body once and set ``has_dynamic_loop``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax import core
+
+__all__ = ["jaxpr_cost", "cost_of_fn", "JaxprCost"]
+
+
+@dataclasses.dataclass
+class JaxprCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    dot_flops: float = 0.0
+    gather_scatter_bytes: float = 0.0
+    has_dynamic_loop: bool = False
+
+    def __add__(self, o: "JaxprCost") -> "JaxprCost":
+        return JaxprCost(
+            self.flops + o.flops,
+            self.bytes + o.bytes,
+            self.dot_flops + o.dot_flops,
+            self.gather_scatter_bytes + o.gather_scatter_bytes,
+            self.has_dynamic_loop or o.has_dynamic_loop,
+        )
+
+    def __mul__(self, k: float) -> "JaxprCost":
+        return JaxprCost(
+            self.flops * k,
+            self.bytes * k,
+            self.dot_flops * k,
+            self.gather_scatter_bytes * k,
+            self.has_dynamic_loop,
+        )
+
+
+def _size(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) if aval.shape else 1
+    except Exception:  # noqa: BLE001
+        return 0
+
+
+def _bytes(aval) -> int:
+    try:
+        return _size(aval) * aval.dtype.itemsize
+    except Exception:  # noqa: BLE001
+        return 0
+
+
+_FLOAT_KINDS = ("f", "c", "bf")
+
+
+def _is_float(aval) -> bool:
+    try:
+        return aval.dtype.kind in ("f", "c")
+    except Exception:  # noqa: BLE001
+        return False
+
+
+_MEM_PRIMS = {
+    "gather",
+    "scatter",
+    "scatter-add",
+    "scatter_add",
+    "dynamic_slice",
+    "dynamic_update_slice",
+    "concatenate",
+    "segment_sum",
+}
+
+_ZERO_COST = {
+    "reshape", "transpose", "broadcast_in_dim", "squeeze", "convert_element_type",
+    "bitcast_convert_type", "slice", "rev", "iota", "stop_gradient", "copy",
+    "sharding_constraint", "device_put", "split", "pjit_sharding_constraint",
+}
+
+
+def _dot_flops(eqn) -> float:
+    d = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = d
+    lhs = eqn.invars[0].aval
+    out = eqn.outvars[0].aval
+    k = int(np.prod([lhs.shape[i] for i in lc])) if lc else 1
+    return 2.0 * _size(out) * k
+
+
+def jaxpr_cost(jaxpr, consts=None) -> JaxprCost:
+    total = JaxprCost()
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "scan":
+            body = eqn.params["jaxpr"]
+            n = eqn.params["length"]
+            total = total + jaxpr_cost(body.jaxpr) * n
+            # xs/ys streaming already included by body eqns touching them.
+            continue
+        if name == "while":
+            body = eqn.params["body_jaxpr"]
+            sub = jaxpr_cost(body.jaxpr)
+            sub.has_dynamic_loop = True
+            total = total + sub
+            continue
+        if name == "cond":
+            branches = eqn.params["branches"]
+            costs = [jaxpr_cost(b.jaxpr) for b in branches]
+            total = total + max(costs, key=lambda c: c.flops)
+            continue
+        if name == "shard_map":
+            # the body runs once PER DEVICE of its mesh with local shapes;
+            # global cost = body cost x mesh size.
+            inner = eqn.params["jaxpr"]
+            inner = inner.jaxpr if hasattr(inner, "jaxpr") else inner
+            n_dev = int(eqn.params["mesh"].size)
+            total = total + jaxpr_cost(inner) * n_dev
+            continue
+        # generic call-like primitives (jit, pjit, remat2, custom_vjp_call,
+        # closed_call, ...): recurse into whichever sub-jaxpr param exists.
+        sub = (
+            eqn.params.get("jaxpr")
+            or eqn.params.get("call_jaxpr")
+            or eqn.params.get("fun_jaxpr")
+        )
+        if sub is not None:
+            inner = sub.jaxpr if hasattr(sub, "jaxpr") else sub
+            total = total + jaxpr_cost(inner)
+            continue
+        if name in ("dot_general",):
+            f = _dot_flops(eqn)
+            b = sum(_bytes(v.aval) for v in eqn.invars) + sum(
+                _bytes(v.aval) for v in eqn.outvars
+            )
+            total = total + JaxprCost(flops=f, bytes=b, dot_flops=f)
+            continue
+        if name in _MEM_PRIMS or name.startswith("gather") or name.startswith("scatter"):
+            b = sum(_bytes(v.aval) for v in eqn.invars) + sum(
+                _bytes(v.aval) for v in eqn.outvars
+            )
+            total = total + JaxprCost(bytes=b, gather_scatter_bytes=b)
+            continue
+        if name in _ZERO_COST:
+            continue
+        # elementwise / reduction: flops ~ max(input, output) element count
+        if any(_is_float(v.aval) for v in list(eqn.outvars) + list(eqn.invars)):
+            n = max(
+                [_size(v.aval) for v in eqn.outvars]
+                + [_size(v.aval) for v in eqn.invars]
+            )
+            total = total + JaxprCost(flops=float(n))
+    return total
+
+
+def cost_of_fn(fn, *args, **kwargs) -> JaxprCost:
+    """Cost of fn(*args) with abstract (ShapeDtypeStruct) arguments."""
+    closed = jax.make_jaxpr(fn, **kwargs)(*args)
+    return jaxpr_cost(closed.jaxpr)

@@ -1,0 +1,97 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the dry-run
+artifacts in runs/dryrun/*.json.
+
+    PYTHONPATH=src python -m repro.launch.report --dir runs/dryrun
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.launch.roofline import V5E, RooflineTerms
+
+__all__ = ["load_records", "roofline_row", "render_dryrun", "render_roofline"]
+
+
+def load_records(d: str) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def terms_of(rec: dict) -> RooflineTerms:
+    c = rec["cost"]
+    coll = rec["collectives"]
+    return RooflineTerms(
+        compute_s=c["flops_per_dev"] / V5E.peak_flops,
+        memory_s=c["bytes_per_dev"] / V5E.hbm_bw,
+        collective_s=coll["link_bytes"] / V5E.link_bw,
+        flops_per_dev=c["flops_per_dev"],
+        bytes_per_dev=c["bytes_per_dev"],
+        link_bytes_per_dev=coll["link_bytes"],
+        operand_bytes_per_dev=coll["operand_bytes"],
+        model_flops=rec.get("model_flops", 0.0),
+        chips=rec["chips"],
+        per_op=coll.get("per_op", {}),
+    )
+
+
+def render_dryrun(recs: list[dict]) -> str:
+    out = [
+        "| arch | shape | mesh | status | lower s | compile s | "
+        "peak GiB/dev | HLO flops/dev | collective GiB/dev (link) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        ok = r.get("status") == "ok"
+        mem = r.get("memory", {}).get("peak_bytes_per_device", 0) / 2**30
+        coll = r.get("collectives", {}).get("link_bytes", 0) / 2**30
+        flops = r.get("cost", {}).get("flops_per_dev", 0)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{'ok' if ok else 'FAIL'} | {r.get('t_lower_s', '')} | "
+            f"{r.get('t_compile_s', '')} | {mem:.2f} | {flops:.3e} | "
+            f"{coll:.3f} |"
+        )
+    return "\n".join(out)
+
+
+def render_roofline(recs: list[dict], mesh: str = "single") -> str:
+    out = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "bound s | MODEL/HLO flops | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("status") != "ok" or r.get("mesh") != mesh:
+            continue
+        t = terms_of(r)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {t.compute_s:.4e} | "
+            f"{t.memory_s:.4e} | {t.collective_s:.4e} | {t.dominant} | "
+            f"{t.bound_s:.4e} | {t.useful_flops_ratio:.2f} | "
+            f"{t.roofline_fraction:.3f} |"
+        )
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="runs/dryrun")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    recs = load_records(args.dir)
+    n_ok = sum(r.get("status") == "ok" for r in recs)
+    print(f"## Dry-run ({n_ok}/{len(recs)} cells ok)\n")
+    print(render_dryrun(recs))
+    print(f"\n## Roofline ({args.mesh}-pod, v5e constants)\n")
+    print(render_roofline(recs, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

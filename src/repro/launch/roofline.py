@@ -1,0 +1,223 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+This container is CPU-only; TPU v5e is the *target*.  The three roofline
+terms are derived from the dry-run's compiled artifact:
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOPs)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+``compiled.cost_analysis()`` on an SPMD-partitioned module reports
+*per-device* flops / bytes (verified against a single-device compile of
+the same program), so the global quantities are per-device x chips and
+the division by chips cancels: each term below is computed directly from
+per-device numbers.
+
+collective_bytes is not in cost_analysis: :func:`collective_bytes`
+parses the post-optimization HLO (``compiled.as_text()``, whose shapes
+are also per-device) and sums operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.  Next to
+that simple convention we report ``link_bytes`` under a ring-algorithm
+model (what actually crosses a chip's ICI links):
+
+    all-reduce       2 * R * (k-1)/k     (R = per-device result bytes,
+    all-gather       R * (k-1)/k          k = collective group size)
+    reduce-scatter   R * (k-1)
+    all-to-all       R * (k-1)/k
+    collective-perm. R
+
+The collective term uses link_bytes (physically meaningful); the table
+also records the operand-sum number for comparability.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import numpy as np
+
+__all__ = [
+    "V5E",
+    "HardwareSpec",
+    "collective_bytes",
+    "roofline_from_artifacts",
+    "RooflineTerms",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops: float  # FLOP/s per chip (bf16)
+    hbm_bw: float  # bytes/s per chip
+    link_bw: float  # bytes/s per ICI link
+
+
+V5E = HardwareSpec("tpu-v5e", peak_flops=197e12, hbm_bw=819e9, link_bw=50e9)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?P<result>\([^)]*\)|\S+)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<start>-start)?\("
+)
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[\d+\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPL_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-device collective traffic, by both conventions (see module doc).
+
+    Returns dict with 'operand_bytes', 'link_bytes', 'per_op' breakdown.
+    """
+    operand = 0.0
+    link = 0.0
+    per_op: dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        R = _shape_bytes(m.group("result"))
+        if R == 0:
+            continue
+        k = max(_group_size(line), 1)
+        if op == "all-reduce":
+            opb = R
+            lkb = 2 * R * (k - 1) / k
+        elif op == "all-gather":
+            opb = R / k
+            lkb = R * (k - 1) / k
+        elif op == "reduce-scatter":
+            opb = R * k
+            lkb = R * (k - 1)
+        elif op == "all-to-all":
+            opb = R
+            lkb = R * (k - 1) / k
+        else:  # collective-permute
+            opb = R
+            lkb = R
+        operand += opb
+        link += lkb
+        per_op[op] = per_op.get(op, 0.0) + lkb
+    return {"operand_bytes": operand, "link_bytes": link, "per_op": per_op}
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_dev: float
+    bytes_per_dev: float
+    link_bytes_per_dev: float
+    operand_bytes_per_dev: float
+    model_flops: float  # global useful FLOPs (6*N*D etc.)
+    chips: int
+    per_op: dict
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / global HLO_FLOPs (remat/redundancy waste)."""
+        hlo_global = self.flops_per_dev * self.chips
+        return self.model_flops / hlo_global if hlo_global else float("nan")
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable fraction of the compute roof: compute term over the
+        binding term (1.0 = compute-bound at peak)."""
+        return self.compute_s / self.bound_s if self.bound_s else float("nan")
+
+
+def model_flops_estimate(arch: str, shape_name: str, meta: dict) -> float:
+    """Useful-FLOPs reference: 6*N*D train, 2*N*D prefill/decode (MoE:
+    active params); elasticity: paper-kernel FLOPs/elem x nelem."""
+    if arch == "elasticity":
+        # forward+backward sum-factorized sweeps: leading-order
+        # 2 passes x 3 dirs x 2 tables... measured analytically in
+        # benchmarks.table5; use the stored per-elem count when present.
+        return meta.get("flops_per_elem", 0.0) * meta.get("nelem", 0)
+    from repro.configs.base import get_config, SHAPES
+
+    cfg = get_config(arch)
+    n = cfg.n_active_params()
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        toks = shape.seq_len * shape.global_batch
+        return 6.0 * n * toks
+    if shape.kind == "prefill":
+        toks = shape.seq_len * shape.global_batch
+        return 2.0 * n * toks
+    return 2.0 * n * shape.global_batch  # decode: one token per row
+
+
+def roofline_from_artifacts(
+    *,
+    flops_per_dev: float,
+    bytes_per_dev: float,
+    hlo_text: str | None,
+    chips: int,
+    model_flops: float,
+    hw: HardwareSpec = V5E,
+    coll: dict | None = None,
+) -> RooflineTerms:
+    if coll is None:
+        coll = collective_bytes(hlo_text or "")
+    return RooflineTerms(
+        compute_s=flops_per_dev / hw.peak_flops,
+        memory_s=bytes_per_dev / hw.hbm_bw,
+        collective_s=coll["link_bytes"] / hw.link_bw,
+        flops_per_dev=flops_per_dev,
+        bytes_per_dev=bytes_per_dev,
+        link_bytes_per_dev=coll["link_bytes"],
+        operand_bytes_per_dev=coll["operand_bytes"],
+        model_flops=model_flops,
+        chips=chips,
+        per_op=coll.get("per_op", {}),
+    )

@@ -1,0 +1,144 @@
+"""End-to-end training driver.
+
+Runs a real (allocated, stepped) training loop on whatever devices exist
+— the CPU container trains reduced configs; on a pod the same driver
+takes the full configs.  Demonstrates the whole substrate: deterministic
+sharded data pipeline, FSDP+TP sharding, remat + sequence-parallel
+constraints, AdamW, atomic checkpointing with restart, straggler
+watchdog, and optional error-feedback gradient compression.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+        --reduced --steps 200 --batch 8 --seq 256 --ckpt-dir runs/ckpt
+
+Fault tolerance: kill the process at any step and rerun the same command
+— it resumes from the last complete checkpoint with bit-identical data
+order (the pipeline is a pure function of the step counter).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ShapeConfig, get_config, get_reduced
+from repro.data.pipeline import TokenPipeline, make_batch
+from repro.distributed.elastic import StepWatchdog
+from repro.distributed.sharding import batch_pspec, state_pspecs
+from repro.launch.mesh import make_local_mesh
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import TrainState, make_train_step, train_state_init
+
+__all__ = ["train_loop", "main"]
+
+
+def train_loop(
+    cfg,
+    shape: ShapeConfig,
+    *,
+    steps: int = 100,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 50,
+    seed: int = 0,
+    opt: AdamWConfig | None = None,
+    compression=None,
+    log_every: int = 10,
+    mesh=None,
+    watchdog_timeout: float = 3600.0,
+):
+    """Train; returns (final state, list of metric dicts)."""
+    opt = opt or AdamWConfig(total_steps=steps, warmup_steps=max(steps // 20, 1))
+    mesh = mesh or make_local_mesh()
+    axes = tuple(mesh.axis_names)
+
+    state = train_state_init(jax.random.PRNGKey(seed), cfg)
+    sspec = state_pspecs(state, mesh)
+    state_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), sspec,
+                            is_leaf=lambda x: isinstance(x, P))
+    state = jax.tree.map(jax.device_put, state, state_sh)
+
+    start_step = 0
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    if mgr is not None:
+        restored = mgr.restore_latest(state)
+        if restored is not None:
+            state, extra, start_step = restored
+            state = jax.tree.map(jax.device_put, state, state_sh)
+            print(f"[train] resumed from checkpoint step {start_step}")
+
+    grad_transform = None
+    if compression is not None:
+        # stateless wrapper: residual folded into opt extras would need a
+        # TrainState extension; examples keep residual host-side.
+        grad_transform = compression
+
+    step_fn = jax.jit(
+        make_train_step(cfg, opt, grad_transform=grad_transform),
+        in_shardings=(state_sh, None),
+        out_shardings=(state_sh, None),
+        donate_argnums=(0,),
+    )
+
+    pipe = TokenPipeline(cfg, shape, seed=seed, start_step=start_step)
+    wd = StepWatchdog(watchdog_timeout)
+    history = []
+    t0 = time.perf_counter()
+    try:
+        for i in range(start_step, steps):
+            batch = next(pipe)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            with wd.step():
+                state, metrics = step_fn(state, batch)
+            if (i + 1) % log_every == 0 or i + 1 == steps:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = i + 1
+                m["wall_s"] = time.perf_counter() - t0
+                history.append(m)
+                print(
+                    f"[train] step {i+1:5d} loss {m['loss']:.4f} "
+                    f"gnorm {m['grad_norm']:.3f} lr {m['lr']:.2e} "
+                    f"({m['wall_s']:.1f}s)", flush=True,
+                )
+            if mgr is not None and (i + 1) % ckpt_every == 0:
+                mgr.save(i + 1, state, extra={"arch": cfg.name})
+    finally:
+        pipe.close()
+    if mgr is not None:
+        mgr.save(steps, state, extra={"arch": cfg.name})
+    return state, history
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the small same-family smoke config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    if jax.default_backend() == "cpu":
+        cfg = dataclasses.replace(cfg, dtype="float32")
+    shape = ShapeConfig("cli", "train", args.seq, args.batch)
+    opt = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                      warmup_steps=max(args.steps // 20, 1))
+    train_loop(
+        cfg, shape, steps=args.steps, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every, seed=args.seed, opt=opt,
+    )
+
+
+if __name__ == "__main__":
+    main()

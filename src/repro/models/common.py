@@ -1,0 +1,65 @@
+"""Shared building blocks: norms, MLPs, embeddings, init helpers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "dense_init",
+    "rmsnorm",
+    "mlp_init",
+    "mlp_apply",
+    "sinusoidal_positions",
+]
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init (LeCun-like)."""
+    fan_in = shape[0] if len(shape) >= 2 else max(shape[0], 1)
+    std = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    """RMSNorm in f32 accumulation, cast back to input dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def mlp_init(key, d_model: int, d_ff: int, mlp_type: str, dtype):
+    ks = jax.random.split(key, 3)
+    if mlp_type == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], (d_model, d_ff), dtype),
+            "w_up": dense_init(ks[1], (d_model, d_ff), dtype),
+            "w_down": dense_init(ks[2], (d_ff, d_model), dtype),
+        }
+    if mlp_type == "gelu":
+        return {
+            "w_up": dense_init(ks[0], (d_model, d_ff), dtype),
+            "w_down": dense_init(ks[1], (d_ff, d_model), dtype),
+        }
+    raise ValueError(mlp_type)
+
+
+def mlp_apply(params, x, mlp_type: str):
+    if mlp_type == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+        u = jnp.einsum("...d,df->...f", x, params["w_up"])
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, params["w_up"]))
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+def sinusoidal_positions(positions, d_model: int, dtype):
+    """Classic transformer sinusoidal embeddings; positions (..., S)."""
+    half = d_model // 2
+    freqs = jnp.exp(-np.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    emb = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    return emb.astype(dtype)

@@ -1,0 +1,51 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL's M-RoPE.
+
+M-RoPE splits the head-dim half-pairs into (t, h, w) sections; each
+section's rotation angle uses the corresponding positional coordinate
+from a (3, B, S) position tensor.  With identical coordinates in all
+three sections (text-only input) M-RoPE reduces exactly to RoPE — that
+reduction is asserted in tests.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["rope_frequencies", "apply_rope", "apply_mrope"]
+
+
+def rope_frequencies(head_dim: int, theta: float, dtype=jnp.float32):
+    half = head_dim // 2
+    return 1.0 / (
+        theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+    ).astype(dtype)
+
+
+def _rotate(x, cos, sin):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, hd); positions: (B, S) int."""
+    freqs = rope_frequencies(x.shape[-1], theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)  # (B, S, 1, half)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    return _rotate(x, cos, sin)
+
+
+def apply_mrope(x, positions3, theta: float, sections: tuple[int, ...]):
+    """x: (B, S, H, hd); positions3: (3, B, S); sections sum to hd // 2."""
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_frequencies(x.shape[-1], theta)  # (half,)
+    # Pick the section's positional coordinate per frequency slot.
+    sec_id = jnp.repeat(
+        jnp.arange(len(sections)), jnp.asarray(sections), total_repeat_length=half
+    )
+    pos = positions3[sec_id]  # (half, B, S) -- gathered per slot
+    ang = jnp.moveaxis(pos, 0, -1).astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    return _rotate(x, cos, sin)

@@ -1,0 +1,210 @@
+"""Mamba2 (SSD) mixer: chunked block-diagonal + low-rank scan form for
+training/prefill, O(1)-state recurrent form for decode.
+
+The chunked SSD algorithm is the same "replace the dense quadratic
+object by its factored action" move as the paper's sum factorization:
+the (L x L) attention-like operator of the state-space dual form is
+never materialized — within-chunk (Q x Q) blocks plus a low-rank
+inter-chunk state recurrence reproduce its action exactly.
+
+Shapes: d_inner = expand * d_model, H = d_inner / head_dim heads,
+N = ssm_state, single B/C group (G = 1, all heads share B and C).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rmsnorm
+
+__all__ = [
+    "mamba2_init",
+    "mamba2_apply",
+    "mamba2_decode",
+    "init_mamba2_state",
+    "chunk_len",
+]
+
+
+def chunk_len(L: int, chunk: int) -> int:
+    """Largest divisor of L that is <= chunk.  Chunked SSD/mLSTM scans are
+    exact for any chunk length, so an awkward L (odd prompt lengths) just
+    gets a smaller chunk rather than padding."""
+    q = min(chunk, L)
+    while L % q:
+        q -= 1
+    return q
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // cfg.ssm_head_dim
+    return d_in, n_heads, cfg.ssm_state
+
+
+def mamba2_init(key, cfg, dtype):
+    d = cfg.d_model
+    d_in, H, N = _dims(cfg)
+    conv_ch = d_in + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in + 2 * N + H), dtype),
+        "conv_w": dense_init(ks[1], (cfg.conv_width, conv_ch), dtype, scale=0.5),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.zeros((H,), jnp.float32),  # A = -exp(a_log) = -1
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(ks[3], (d_in, d), dtype),
+    }
+
+
+def _split_proj(params, x, cfg):
+    d_in, H, N = _dims(cfg)
+    zxbcdt = jnp.einsum("bld,dn->bln", x, params["in_proj"])
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : 2 * d_in + 2 * N]
+    dt_raw = zxbcdt[..., 2 * d_in + 2 * N :]
+    return z, xbc, dt_raw
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv along L. xbc (B, L, C); w (W, C)."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :] for i in range(W)
+    )
+    return jax.nn.silu(out + b)
+
+
+def _ssd_chunked(xh, dt, a_log, bmat, cmat, chunk):
+    """Chunked SSD scan.
+
+    xh:   (B, L, H, P)   per-head inputs
+    dt:   (B, L, H)      softplus'd step sizes
+    bmat: (B, L, N), cmat: (B, L, N)  shared across heads (G = 1)
+    Returns y (B, L, H, P) and the final state (B, H, P, N).
+    """
+    B, L, H, P = xh.shape
+    N = bmat.shape[-1]
+    Q = chunk_len(L, chunk)
+    nc = L // Q
+
+    A = -jnp.exp(a_log)  # (H,)
+    a = dt * A  # (B, L, H) log-decay increments
+    xdt = xh * dt[..., None]
+
+    ac = a.reshape(B, nc, Q, H)
+    cs = jnp.cumsum(ac, axis=2)  # inclusive cumsum within chunk
+    xc = xdt.reshape(B, nc, Q, H, P)
+    bc = bmat.reshape(B, nc, Q, N)
+    cc = cmat.reshape(B, nc, Q, N)
+
+    # --- within-chunk (block-diagonal) term
+    # Ltri[i, j] = exp(cs_i - cs_j) for i >= j
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    ltri = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)  # (B,nc,Q,Q)
+    y_diag = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, ltri, xc)
+
+    # --- per-chunk outgoing state: sum_j exp(cs_last - cs_j) B_j (x)dt_j
+    decay_out = jnp.exp(cs[:, :, -1:, :] - cs)  # (B,nc,Q,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", bc, decay_out, xc)
+
+    # --- inter-chunk recurrence (low-rank carry)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])  # (B,nc,H)
+
+    def step(s, inp):
+        st, dec = inp  # (B,H,N,P), (B,H)
+        s_new = s * dec[:, :, None, None] + st
+        return s_new, s  # emit the state *entering* this chunk
+
+    s0 = jnp.zeros((B, H, N, P), xh.dtype)
+    s_final, s_in = jax.lax.scan(
+        step,
+        s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    s_in = jnp.moveaxis(s_in, 0, 1)  # (B,nc,H,N,P) state entering chunk
+
+    # --- inter-chunk contribution: C_i . S_in decayed to position i
+    y_off = jnp.einsum(
+        "bcin,bcih,bchnp->bcihp", cc, jnp.exp(cs), s_in
+    )
+    y = (y_diag + y_off).reshape(B, L, H, P)
+    return y, s_final
+
+
+def mamba2_apply(params, x, cfg):
+    """Full-sequence Mamba2 mixer. x (B, L, d_model) -> (y, final_state)."""
+    d_in, H, N = _dims(cfg)
+    P = cfg.ssm_head_dim
+    B, L, _ = x.shape
+    z, xbc_raw, dt_raw = _split_proj(params, x, cfg)
+    xbc = _causal_conv(xbc_raw, params["conv_w"], params["conv_b"])
+    xs = xbc[..., :d_in].reshape(B, L, H, P)
+    bmat = xbc[..., d_in : d_in + N]
+    cmat = xbc[..., d_in + N :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+
+    y, state = _ssd_chunked(
+        xs.astype(jnp.float32),
+        dt,
+        params["a_log"],
+        bmat.astype(jnp.float32),
+        cmat.astype(jnp.float32),
+        cfg.chunk_size,
+    )
+    y = y + params["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, L, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bln,nd->bld", y, params["out_proj"])
+    # conv tail for a subsequent decode phase (last W-1 pre-conv inputs)
+    tail = xbc_raw[:, -(cfg.conv_width - 1) :, :]
+    conv_state = jnp.pad(
+        tail, ((0, 0), (max(0, (cfg.conv_width - 1) - L), 0), (0, 0))
+    )
+    return out, {"ssm": state, "conv": conv_state}
+
+
+def init_mamba2_state(cfg, batch: int, dtype):
+    d_in, H, N = _dims(cfg)
+    P = cfg.ssm_head_dim
+    return {
+        "ssm": jnp.zeros((batch, H, N, P), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, d_in + 2 * N), dtype),
+    }
+
+
+def mamba2_decode(params, x, cfg, state):
+    """One-token recurrent step. x (B, 1, d) -> (y (B, 1, d), new state)."""
+    d_in, H, N = _dims(cfg)
+    P = cfg.ssm_head_dim
+    B = x.shape[0]
+    z, xbc_new, dt_raw = _split_proj(params, x, cfg)
+
+    # causal conv over [conv_state, xbc_new]
+    hist = jnp.concatenate([state["conv"], xbc_new], axis=1)  # (B, W, C)
+    w = params["conv_w"]
+    conv = jnp.einsum("bwc,wc->bc", hist, w) + params["conv_b"]
+    xbc = jax.nn.silu(conv)[:, None, :]
+    new_conv = hist[:, 1:, :]
+
+    xs = xbc[..., :d_in].reshape(B, H, P).astype(jnp.float32)
+    bmat = xbc[:, 0, d_in : d_in + N].astype(jnp.float32)
+    cmat = xbc[:, 0, d_in + N :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])
+    decay = jnp.exp(dt * -jnp.exp(params["a_log"]))  # (B, H)
+
+    s = state["ssm"] * decay[:, :, None, None] + jnp.einsum(
+        "bn,bh,bhp->bhnp", bmat, dt, xs
+    )
+    y = jnp.einsum("bn,bhnp->bhp", cmat, s)
+    y = y + params["d_skip"][None, :, None] * xs
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bln,nd->bld", y, params["out_proj"])
+    return out, {"ssm": s, "conv": new_conv}

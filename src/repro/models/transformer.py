@@ -1,0 +1,627 @@
+"""Model assembly: every assigned architecture as one decoder stack.
+
+A single ``init_params`` / ``forward`` / ``prefill`` / ``decode_step``
+interface covers the six families:
+
+* dense / vlm / audio / moe — attention backbone; per-layer params are
+  *stacked* along a leading layer axis and the forward pass is a
+  ``lax.scan`` over layers (HLO size O(1) in depth — required for the
+  64-layer dry-run configs) with per-layer ``jax.checkpoint`` (remat).
+* zamba2 hybrid — Mamba2 backbone scanned in groups of
+  ``shared_attn_every``; one weight-shared attention+MLP block applied
+  after each group (the Zamba trick: 9 applications of a single set of
+  attention weights at 54 layers).
+* xlstm — heterogeneous mLSTM/sLSTM blocks (``slstm_indices``); a plain
+  python loop (12 layers at full scale, HLO stays small).
+
+Inputs are dicts from :func:`repro.data.pipeline.batch_spec`:
+``tokens (B, S)`` int32 (musicgen: ``(B, S, n_codebooks)``), optional
+``vision_embeds (B, n_vision_tokens, d_model)`` for the VLM stub, and
+``labels`` shaped like tokens with ``-1`` marking masked-out positions.
+
+The LM head is evaluated through :func:`chunked_ce_loss`, which scans
+over sequence chunks so the (B, S, vocab) float32 logits tensor is never
+materialized in HBM — the same round-trip-avoidance insight as the
+paper's macro-kernel fusion, applied to the loss layer.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ssm as _ssm
+from repro.models import xlstm as _xl
+from repro.models.attention import (
+    attention,
+    attn_init,
+    decode_attention,
+    init_kv_cache,
+)
+from repro.models.common import (
+    dense_init,
+    mlp_apply,
+    mlp_init,
+    rmsnorm,
+    sinusoidal_positions,
+)
+from repro.models.moe import moe_apply, moe_init
+
+__all__ = [
+    "init_params",
+    "forward",
+    "loss_fn",
+    "prefill",
+    "decode_step",
+    "init_decode_state",
+    "chunked_ce_loss",
+    "param_count",
+]
+
+AUX_LOSS_COEF = 0.01
+LOSS_CHUNK = 2048  # sequence chunk for the fused LM-head/CE scan
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Per-family block init / apply
+# ---------------------------------------------------------------------------
+def _attn_block_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "attn_norm": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn_init(k1, cfg, dtype),
+        "mlp_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if cfg.is_moe:
+        p["moe"] = moe_init(k2, cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype)
+    return p
+
+
+def _attn_block_apply(p, x, cfg, positions, impl="auto", act_spec=None):
+    """Pre-norm attention block. Returns (x, aux, kv)."""
+    h, kv = attention(
+        p["attn"], rmsnorm(x, p["attn_norm"], cfg.norm_eps), cfg, positions, impl
+    )
+    x = x + h
+    hn = rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+    if cfg.is_moe:
+        m, aux = moe_apply(p["moe"], hn, cfg, act_spec=act_spec)
+    else:
+        m, aux = mlp_apply(p["mlp"], hn, cfg.mlp_type), 0.0
+    return x + m, aux, kv
+
+
+def _attn_block_decode(p, x, cfg, cache, pos):
+    rope_pos = pos
+    if cfg.pos_embed == "mrope":
+        # text tokens past the vision prefix: t = h = w = pos - nv + g
+        g = max(int(math.isqrt(max(cfg.n_vision_tokens, 1))), 1)
+        rope_pos = pos - cfg.n_vision_tokens + g
+    h, cache = decode_attention(
+        p["attn"], rmsnorm(x, p["attn_norm"], cfg.norm_eps), cfg, cache, pos,
+        rope_pos=rope_pos,
+    )
+    x = x + h
+    hn = rmsnorm(x, p["mlp_norm"], cfg.norm_eps)
+    if cfg.is_moe:
+        m, _ = moe_apply(p["moe"], hn, cfg)
+    else:
+        m = mlp_apply(p["mlp"], hn, cfg.mlp_type)
+    return x + m, cache
+
+
+def _mamba_block_init(key, cfg, dtype):
+    return {
+        "norm": jnp.ones((cfg.d_model,), dtype),
+        "mixer": _ssm.mamba2_init(key, cfg, dtype),
+    }
+
+
+def _mamba_block_apply(p, x, cfg):
+    h, state = _ssm.mamba2_apply(p["mixer"], rmsnorm(x, p["norm"], cfg.norm_eps), cfg)
+    return x + h, state
+
+
+def _mamba_block_decode(p, x, cfg, state):
+    h, state = _ssm.mamba2_decode(p["mixer"], rmsnorm(x, p["norm"], cfg.norm_eps), cfg, state)
+    return x + h, state
+
+
+def _stacked(init_one, key, n, *args):
+    """Stack n independent inits along a leading layer axis."""
+    keys = jax.random.split(key, n)
+    inits = [init_one(k, *args) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *inits)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_params(key, cfg) -> dict:
+    dtype = _dtype(cfg)
+    k_emb, k_blocks, k_shared, k_head = jax.random.split(key, 4)
+
+    params: dict[str, Any] = {}
+    if cfg.n_codebooks:
+        params["embed"] = dense_init(
+            k_emb, (cfg.n_codebooks, cfg.vocab, cfg.d_model), dtype
+        )
+    else:
+        params["embed"] = dense_init(k_emb, (cfg.vocab, cfg.d_model), dtype)
+
+    bp = cfg.block_pattern
+    if bp == "attn":
+        params["blocks"] = _stacked(_attn_block_init, k_blocks, cfg.n_layers, cfg, dtype)
+    elif bp == "zamba2":
+        if cfg.n_layers % cfg.shared_attn_every:
+            raise ValueError("zamba2 requires n_layers % shared_attn_every == 0")
+        params["blocks"] = _stacked(_mamba_block_init, k_blocks, cfg.n_layers, cfg, dtype)
+        params["shared"] = _attn_block_init(k_shared, cfg, dtype)
+    elif bp == "mamba2":
+        params["blocks"] = _stacked(_mamba_block_init, k_blocks, cfg.n_layers, cfg, dtype)
+    elif bp == "xlstm":
+        keys = jax.random.split(k_blocks, cfg.n_layers)
+        params["blocks"] = [
+            _xl.slstm_init(keys[i], cfg, dtype)
+            if i in cfg.slstm_indices
+            else {
+                "norm": jnp.ones((cfg.d_model,), dtype),
+                "mixer": _xl.mlstm_init(keys[i], cfg, dtype),
+            }
+            for i in range(cfg.n_layers)
+        ]
+    else:
+        raise ValueError(bp)
+
+    params["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    if cfg.n_codebooks:
+        params["lm_head"] = dense_init(
+            k_head, (cfg.n_codebooks, cfg.d_model, cfg.vocab), dtype
+        )
+    elif not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, (cfg.d_model, cfg.vocab), dtype)
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# embedding / positions
+# ---------------------------------------------------------------------------
+def _embed(params, batch, cfg):
+    tokens = batch["tokens"]
+    if cfg.n_codebooks:
+        # (B, S, n_cb) -> sum of per-codebook embeddings.
+        x = jnp.take(params["embed"][0], tokens[..., 0], axis=0)
+        for c in range(1, cfg.n_codebooks):
+            x = x + jnp.take(params["embed"][c], tokens[..., c], axis=0)
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.n_vision_tokens and "vision_embeds" in batch:
+        nv = cfg.n_vision_tokens
+        x = jnp.concatenate(
+            [batch["vision_embeds"].astype(x.dtype), x[:, nv:]], axis=1
+        )
+    B, S = tokens.shape[:2]
+    if cfg.pos_embed == "sinusoidal":
+        pos = jnp.arange(S)[None, :]
+        x = x + sinusoidal_positions(pos, cfg.d_model, x.dtype)
+    return x
+
+
+def _positions(batch, cfg):
+    """Position ids: (B, S) for RoPE, (3, B, S) t/h/w for M-RoPE."""
+    B, S = batch["tokens"].shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    if cfg.pos_embed != "mrope":
+        return pos
+    # VLM stub M-RoPE: the first n_vision_tokens form a sqrt(n) x sqrt(n)
+    # patch grid at t=0; text tokens advance all three components together
+    # starting from the grid extent (Qwen2-VL convention).
+    nv = cfg.n_vision_tokens
+    g = max(int(math.isqrt(max(nv, 1))), 1)
+    i = jnp.arange(S, dtype=jnp.int32)
+    is_vis = i < nv
+    t = jnp.where(is_vis, 0, i - nv + g)
+    h = jnp.where(is_vis, i // g, i - nv + g)
+    w = jnp.where(is_vis, i % g, i - nv + g)
+    return jnp.broadcast_to(jnp.stack([t, h, w])[:, None, :], (3, B, S))
+
+
+# ---------------------------------------------------------------------------
+# forward (training path): scan over layers, remat per block
+# ---------------------------------------------------------------------------
+def forward(params, batch, cfg, *, remat: bool = True, attn_impl: str = "auto",
+            act_spec=None):
+    """Run the stack; returns (hidden (B, S, d), aux_loss scalar).
+
+    act_spec: optional PartitionSpec applied to the residual stream
+    between blocks (sequence parallelism — bounds the per-layer remat
+    save under scan; see repro.distributed.sharding.act_pspec).
+    """
+    constrain = (
+        (lambda t: jax.lax.with_sharding_constraint(t, act_spec))
+        if act_spec is not None
+        else (lambda t: t)
+    )
+    x = constrain(_embed(params, batch, cfg))
+    positions = _positions(batch, cfg)
+    bp = cfg.block_pattern
+
+    if bp == "attn":
+        def body(carry, layer_p):
+            x, aux = carry
+            x, a, _ = _attn_block_apply(
+                layer_p, x, cfg, positions, attn_impl, act_spec=act_spec
+            )
+            return (constrain(x), aux + a), None
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        (x, aux), _ = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), params["blocks"]
+        )
+
+    elif bp in ("zamba2", "mamba2"):
+        def mbody(carry, layer_p):
+            x = carry
+            x, _ = _mamba_block_apply(layer_p, x, cfg)
+            return constrain(x), None
+
+        if remat:
+            mbody = jax.checkpoint(mbody, prevent_cse=False)
+        if bp == "mamba2":
+            x, _ = jax.lax.scan(mbody, x, params["blocks"])
+            aux = 0.0
+        else:
+            every = cfg.shared_attn_every
+            ng = cfg.n_layers // every
+            grouped = jax.tree.map(
+                lambda a: a.reshape((ng, every) + a.shape[1:]), params["blocks"]
+            )
+            shared = params["shared"]
+
+            def gbody(carry, group_p):
+                x = carry
+                x, _ = jax.lax.scan(mbody, x, group_p)
+                x, _, _ = _attn_block_apply(shared, x, cfg, positions, attn_impl)
+                return x, None
+
+            if remat:
+                gbody = jax.checkpoint(gbody, prevent_cse=False)
+            x, _ = jax.lax.scan(gbody, x, grouped)
+            aux = 0.0
+
+    elif bp == "xlstm":
+        aux = 0.0
+        for i, bpar in enumerate(params["blocks"]):
+            if i in cfg.slstm_indices:
+                h, _ = _xl.slstm_apply(bpar, x, cfg)  # post-norm residual inside
+                x = x + h
+            else:
+                h, _ = _mamba_like_mlstm(bpar, x, cfg)
+                x = x + h
+    else:
+        raise ValueError(bp)
+
+    return rmsnorm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def _mamba_like_mlstm(bpar, x, cfg):
+    return _xl.mlstm_apply(bpar["mixer"], rmsnorm(x, bpar["norm"], cfg.norm_eps), cfg)
+
+
+# ---------------------------------------------------------------------------
+# fused LM head + cross-entropy (never materializes (B, S, V) in f32)
+# ---------------------------------------------------------------------------
+def chunked_ce_loss(hidden, head_w, labels, chunk: int = LOSS_CHUNK,
+                    logits_spec=None):
+    """Mean next-token CE over valid (label >= 0) positions.
+
+    hidden (B, S, d); head_w (d, V); labels (B, S) already shifted by the
+    data pipeline (-1 = ignore).  Scans over S-chunks with a rematted
+    body, so the (B, c, V) float32 logits exist only transiently in both
+    the forward AND the backward pass (without remat, scan AD would save
+    every chunk's logits — the full (B, S, V) f32 tensor this function
+    exists to avoid).  ``logits_spec`` shards the transient chunk over
+    the model axis (vocab-parallel logits).
+    """
+    B, S, d = hidden.shape
+    c = min(chunk, S)
+    assert S % c == 0, (S, c)
+    h = jnp.moveaxis(hidden.reshape(B, S // c, c, d), 1, 0)
+    l = jnp.moveaxis(labels.reshape(B, S // c, c), 1, 0)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(carry, inp):
+        tot, cnt = carry
+        hc, lc = inp
+        logits = (hc @ head_w).astype(jnp.float32)
+        if logits_spec is not None:
+            logits = jax.lax.with_sharding_constraint(logits, logits_spec)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1
+        )[..., 0]
+        valid = lc >= 0
+        tot = tot + jnp.sum(jnp.where(valid, lse - ll, 0.0))
+        cnt = cnt + jnp.sum(valid)
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (0.0, 0), (h, l))
+    return tot / jnp.maximum(cnt, 1)
+
+
+def _head_weight(params, cfg):
+    if cfg.n_codebooks:
+        return params["lm_head"]  # (n_cb, d, V)
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def loss_fn(params, batch, cfg, *, remat: bool = True, attn_impl: str = "auto",
+            act_spec=None, logits_spec=None):
+    """Scalar training loss (CE + MoE aux)."""
+    hidden, aux = forward(
+        params, batch, cfg, remat=remat, attn_impl=attn_impl, act_spec=act_spec
+    )
+    w = _head_weight(params, cfg)
+    if cfg.n_codebooks:
+        ce = 0.0
+        for cb in range(cfg.n_codebooks):
+            ce = ce + chunked_ce_loss(
+                hidden, w[cb], batch["labels"][..., cb], logits_spec=logits_spec
+            )
+        ce = ce / cfg.n_codebooks
+    else:
+        ce = chunked_ce_loss(hidden, w, batch["labels"], logits_spec=logits_spec)
+    return ce + AUX_LOSS_COEF * aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode with explicit state
+# ---------------------------------------------------------------------------
+def init_decode_state(cfg, batch: int, max_len: int):
+    """Per-layer decode state, stacked on a leading layer axis."""
+    dtype = _dtype(cfg)
+    bp = cfg.block_pattern
+    if bp == "attn":
+        one = init_kv_cache(cfg, batch, max_len, dtype)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), one
+        )
+    if bp in ("mamba2", "zamba2"):
+        one = _ssm.init_mamba2_state(cfg, batch, dtype)
+        st = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), one
+        )
+        if bp == "zamba2":
+            ng = cfg.n_layers // cfg.shared_attn_every
+            kv = init_kv_cache(cfg, batch, max_len, dtype)
+            st = {
+                "mamba": st,
+                "shared_kv": jax.tree.map(
+                    lambda a: jnp.broadcast_to(a[None], (ng,) + a.shape), kv
+                ),
+            }
+        return st
+    if bp == "xlstm":
+        return [
+            _xl.init_slstm_state(cfg, batch, dtype)
+            if i in cfg.slstm_indices
+            else _xl.init_mlstm_state(cfg, batch, dtype)
+            for i in range(cfg.n_layers)
+        ]
+    raise ValueError(bp)
+
+
+def decode_step(params, token, state, pos, cfg):
+    """One decode step.
+
+    token: (B, 1) int32 (musicgen (B, 1, n_cb)); pos: scalar int32 —
+    number of tokens already in the state.  Returns (logits, new state);
+    logits (B, V) (musicgen (B, n_cb, V)).
+    """
+    batch = {"tokens": token}
+    x = _embed(params, batch, cfg)
+    if cfg.pos_embed == "sinusoidal":
+        # _embed added position 0; re-add the correct one.
+        x = x - sinusoidal_positions(
+            jnp.zeros((1, 1), jnp.int32), cfg.d_model, x.dtype
+        )
+        x = x + sinusoidal_positions(
+            jnp.full((1, 1), pos, jnp.int32), cfg.d_model, x.dtype
+        )
+    bp = cfg.block_pattern
+
+    if bp == "attn":
+        def body(x, inp):
+            layer_p, cache = inp
+            x, cache = _attn_block_decode(layer_p, x, cfg, cache, pos)
+            return x, cache
+
+        x, state = jax.lax.scan(body, x, (params["blocks"], state))
+
+    elif bp in ("mamba2", "zamba2"):
+        mamba_state = state["mamba"] if bp == "zamba2" else state
+
+        def mbody(x, inp):
+            layer_p, st = inp
+            x, st = _mamba_block_decode(layer_p, x, cfg, st)
+            return x, st
+
+        if bp == "mamba2":
+            x, state = jax.lax.scan(mbody, x, (params["blocks"], mamba_state))
+        else:
+            every = cfg.shared_attn_every
+            ng = cfg.n_layers // every
+            grouped_p = jax.tree.map(
+                lambda a: a.reshape((ng, every) + a.shape[1:]), params["blocks"]
+            )
+            grouped_s = jax.tree.map(
+                lambda a: a.reshape((ng, every) + a.shape[1:]), mamba_state
+            )
+            shared = params["shared"]
+
+            def gbody(x, inp):
+                gp, gs, kv = inp
+                x, gs = jax.lax.scan(mbody, x, (gp, gs))
+                x, kv = _attn_block_decode(shared, x, cfg, kv, pos)
+                return x, (gs, kv)
+
+            x, (gs, kvs) = jax.lax.scan(
+                gbody, x, (grouped_p, grouped_s, state["shared_kv"])
+            )
+            state = {
+                "mamba": jax.tree.map(
+                    lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), gs
+                ),
+                "shared_kv": kvs,
+            }
+
+    elif bp == "xlstm":
+        new_states = []
+        for i, bpar in enumerate(params["blocks"]):
+            if i in cfg.slstm_indices:
+                h, st = _xl.slstm_decode(bpar, x, cfg, state[i])
+            else:
+                h, st = _xl.mlstm_decode(
+                    bpar["mixer"], rmsnorm(x, bpar["norm"], cfg.norm_eps), cfg, state[i]
+                )
+            x = x + h
+            new_states.append(st)
+        state = new_states
+    else:
+        raise ValueError(bp)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    w = _head_weight(params, cfg)
+    if cfg.n_codebooks:
+        logits = jnp.einsum("bld,cdv->bclv", x, w)[:, :, 0]
+    else:
+        logits = (x @ w)[:, 0]
+    return logits, state
+
+
+def prefill(params, batch, cfg, max_len: int | None = None, attn_impl: str = "auto",
+            act_spec=None):
+    """Process a full prompt; returns (last-position logits, decode state).
+
+    Implemented for the attention family (KV states collected from the
+    forward pass); recurrent families prefill by running forward and
+    re-deriving state from their scan carries.
+    """
+    cfg_dtype = _dtype(cfg)
+    B, S = batch["tokens"].shape[:2]
+    max_len = max_len or S
+    x = _embed(params, batch, cfg)
+    positions = _positions(batch, cfg)
+    bp = cfg.block_pattern
+
+    if bp == "attn":
+        caches = init_decode_state(cfg, B, max_len)
+
+        def body(carry, inp):
+            x = carry
+            layer_p, _ = inp
+            x, _, (k, v) = _attn_block_apply(
+                layer_p, x, cfg, positions, attn_impl, act_spec=act_spec
+            )
+            return x, (k, v)
+
+        x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], jnp.arange(cfg.n_layers)))
+        size = caches["k"].shape[2]
+        if cfg.sliding_window and S > size:
+            # rolling window layout: slot = pos % size
+            idx = (jnp.arange(S - size, S)) % size
+            ks = ks[:, :, -size:][:, :, jnp.argsort(idx)]
+            vs = vs[:, :, -size:][:, :, jnp.argsort(idx)]
+            caches = {"k": ks.astype(cfg_dtype), "v": vs.astype(cfg_dtype)}
+        else:
+            caches = {
+                "k": caches["k"].at[:, :, :S].set(ks.astype(cfg_dtype)),
+                "v": caches["v"].at[:, :, :S].set(vs.astype(cfg_dtype)),
+            }
+        state = caches
+    else:
+        # Recurrent families: one scan pass collects hidden AND states.
+        x, state = _recurrent_prefill(params, x, cfg, positions, max_len)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    w = _head_weight(params, cfg)
+    if cfg.n_codebooks:
+        logits = jnp.einsum("bd,cdv->bcv", x[:, -1], w)
+    else:
+        logits = x[:, -1] @ w
+    return logits, state
+
+
+def _recurrent_prefill(params, x, cfg, positions, max_len):
+    """One pass over the stack, returning (hidden, decode-ready states).
+
+    Uniform recurrent families scan over the stacked layer params
+    (states come out stacked (L, ...) — the init_decode_state layout);
+    xlstm keeps a python loop (12 heterogeneous layers at full scale).
+    """
+    bp = cfg.block_pattern
+    B = x.shape[0]
+    dtype = _dtype(cfg)
+    if bp == "xlstm":
+        states = []
+        for i, bpar in enumerate(params["blocks"]):
+            if i in cfg.slstm_indices:
+                h, st = _xl.slstm_apply(bpar, x, cfg)
+            else:
+                h, st = _mamba_like_mlstm(bpar, x, cfg)
+            states.append(st)
+            x = x + h
+        return x, states
+
+    def mbody(x, layer_p):
+        x, st = _mamba_block_apply(layer_p, x, cfg)
+        return x, st
+
+    if bp == "mamba2":
+        x, states = jax.lax.scan(mbody, x, params["blocks"])
+        return x, states
+
+    # zamba2: groups of `every` mamba layers + the weight-shared attn block
+    every = cfg.shared_attn_every
+    ng = cfg.n_layers // every
+    grouped = jax.tree.map(
+        lambda a: a.reshape((ng, every) + a.shape[1:]), params["blocks"]
+    )
+    shared = params["shared"]
+    S = x.shape[1]
+
+    def gbody(x, group_p):
+        x, sts = jax.lax.scan(mbody, x, group_p)
+        xn = rmsnorm(x, shared["attn_norm"], cfg.norm_eps)
+        h2, (k, v) = attention(shared["attn"], xn, cfg, positions)
+        x = x + h2
+        hn = rmsnorm(x, shared["mlp_norm"], cfg.norm_eps)
+        x = x + mlp_apply(shared["mlp"], hn, cfg.mlp_type)
+        kv = init_kv_cache(cfg, B, max_len, dtype)
+        kv = {
+            "k": kv["k"].at[:, :S].set(k.astype(dtype)),
+            "v": kv["v"].at[:, :S].set(v.astype(dtype)),
+        }
+        return x, (sts, kv)
+
+    x, (gs, kvs) = jax.lax.scan(gbody, x, grouped)
+    mamba = jax.tree.map(lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), gs)
+    return x, {"mamba": mamba, "shared_kv": kvs}

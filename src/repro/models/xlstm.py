@@ -1,0 +1,282 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential recurrence) — arXiv:2405.04517, simplified to
+the load-bearing structure:
+
+* mLSTM: exponential input gate + forget gate per head, matrix memory
+  C in R^{dh x dh}, normalizer n, stabilizer m.  Training/prefill uses a
+  *chunkwise* form (quadratic within a chunk, O(1) carry across chunks —
+  the same never-materialize-the-LxL-operator move as SSD/sum
+  factorization), decode uses the O(1) recurrent form.  Stabilized
+  exactly as in the paper: h = (C q) / max(|n . q|, exp(-m)).
+* sLSTM: per-head scalar cell/normalizer with block-diagonal recurrent
+  feedback R h_{t-1}, exponential gating with the same stabilizer trick,
+  evaluated with lax.scan (inherently sequential, as in the paper).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rmsnorm
+
+__all__ = [
+    "mlstm_init", "mlstm_apply", "mlstm_decode", "init_mlstm_state",
+    "slstm_init", "slstm_apply", "slstm_decode", "init_slstm_state",
+]
+
+NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def _mdims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = cfg.n_heads
+    return d_in, H, d_in // H
+
+
+def mlstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    d_in, H, dh = _mdims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * d_in), dtype),
+        "conv_w": dense_init(ks[1], (cfg.conv_width, d_in), dtype, scale=0.5),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "wq": dense_init(ks[2], (d_in, d_in), dtype),
+        "wk": dense_init(ks[3], (d_in, d_in), dtype),
+        "wv": dense_init(ks[4], (d_in, d_in), dtype),
+        "w_gates": dense_init(ks[5], (d_in, 2 * H), dtype),
+        "b_gates": jnp.zeros((2 * H,), jnp.float32),
+        "norm": jnp.ones((d_in,), dtype),
+        "w_down": dense_init(ks[6], (d_in, d), dtype),
+    }
+
+
+def _mlstm_qkvg(params, x, cfg):
+    d_in, H, dh = _mdims(cfg)
+    B, L, _ = x.shape
+    up = jnp.einsum("bld,dn->bln", x, params["w_up"])
+    xb, z = up[..., :d_in], up[..., d_in:]
+    # causal depthwise conv + silu on the qk branch
+    W = params["conv_w"].shape[0]
+    padded = jnp.pad(xb, ((0, 0), (W - 1, 0), (0, 0)))
+    conv = sum(
+        padded[:, i : i + L, :] * params["conv_w"][i][None, None, :]
+        for i in range(W)
+    )
+    xc = jax.nn.silu(conv + params["conv_b"])
+    q = jnp.einsum("bln,nm->blm", xc, params["wq"]).reshape(B, L, H, dh)
+    k = jnp.einsum("bln,nm->blm", xc, params["wk"]).reshape(B, L, H, dh)
+    v = jnp.einsum("bln,nm->blm", xb, params["wv"]).reshape(B, L, H, dh)
+    gates = (
+        jnp.einsum("bln,nm->blm", xc, params["w_gates"]).astype(jnp.float32)
+        + params["b_gates"]
+    )
+    li = gates[..., :H]  # log input gate (exp gating: used directly)
+    lf = jax.nn.log_sigmoid(gates[..., H:])  # log forget gate
+    return q, k, v, li, lf, z, xb
+
+
+def _mlstm_chunk_scan(q, k, v, li, lf, chunk):
+    """Chunkwise stabilized mLSTM. q/k/v (B, L, H, dh); li/lf (B, L, H)."""
+    B, L, H, dh = q.shape
+    from repro.models.ssm import chunk_len
+
+    Q = chunk_len(L, chunk)
+    nc = L // Q
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+
+    qc = q.reshape(B, nc, Q, H, dh).astype(jnp.float32) * scale
+    kc = k.reshape(B, nc, Q, H, dh).astype(jnp.float32)
+    vc = v.reshape(B, nc, Q, H, dh).astype(jnp.float32)
+    lic = li.reshape(B, nc, Q, H)
+    lfc = lf.reshape(B, nc, Q, H)
+    F = jnp.cumsum(lfc, axis=2)  # inclusive within-chunk cum log-forget
+
+    # pairwise log weights W[t, j] = F_t - F_j + li_j  (t >= j)
+    Wlog = F[:, :, :, None, :] - F[:, :, None, :, :] + lic[:, :, None, :, :]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    Wlog = jnp.where(tri, Wlog, NEG)
+
+    def step(carry, inp):
+        C0, n0, m0 = carry  # (B,H,dh,dh), (B,H,dh), (B,H)
+        qt, kt, vt, Ft, Wt, lit = inp
+        # qt (B,Q,H,dh), Ft (B,Q,H), Wt (B,Q,Q,H)
+        b = Ft + m0[:, None, :]  # log carry decay at each t
+        m = jnp.maximum(b, Wt.max(axis=2))  # (B,Q,H)
+        c0 = jnp.exp(b - m)
+        P = jnp.exp(Wt - m[:, :, None, :])  # (B,Q,Q,H)
+        s = jnp.einsum("bthd,bjhd->btjh", qt, kt)  # scaled q.k
+        sw = s * P
+        num = jnp.einsum("btjh,bjhd->bthd", sw, vt) + c0[..., None] * jnp.einsum(
+            "bhde,bthd->bthe", C0, qt
+        )
+        # denominator: c0 (n0.q) + sum_j P (k_j.q_t)
+        den = c0 * jnp.einsum("bhd,bthd->bth", n0, qt) + jnp.einsum(
+            "btjh->bth", sw
+        )
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None]
+
+        # carry to next chunk (t = Q-1 quantities, unstabilized-in-log form)
+        FQ = Ft[:, -1, :]  # total log forget of the chunk
+        wq_ = FQ[:, None, :] - Ft + lit  # (B,Q,H) per-j weight to chunk end
+        m1 = jnp.maximum(FQ + m0, (wq_).max(axis=1))
+        Cnew = jnp.exp(FQ + m0 - m1)[:, :, None, None] * C0 + jnp.einsum(
+            "bjh,bjhd,bjhe->bhde", jnp.exp(wq_ - m1[:, None, :]), kt, vt
+        )
+        nnew = jnp.exp(FQ + m0 - m1)[:, :, None] * n0 + jnp.einsum(
+            "bjh,bjhd->bhd", jnp.exp(wq_ - m1[:, None, :]), kt
+        )
+        return (Cnew, nnew, m1), h
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), 0.0, jnp.float32)
+    (Cf, nf, mf), hs = jax.lax.scan(
+        step,
+        (C0, n0, m0),
+        (
+            jnp.moveaxis(qc, 1, 0),
+            jnp.moveaxis(kc, 1, 0),
+            jnp.moveaxis(vc, 1, 0),
+            jnp.moveaxis(F, 1, 0),
+            jnp.moveaxis(Wlog, 1, 0),
+            jnp.moveaxis(lic, 1, 0),
+        ),
+    )
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, L, H, dh)
+    return h, (Cf, nf, mf)
+
+
+def mlstm_apply(params, x, cfg):
+    d_in, H, dh = _mdims(cfg)
+    B, L, _ = x.shape
+    q, k, v, li, lf, z, xb = _mlstm_qkvg(params, x, cfg)
+    h, state = _mlstm_chunk_scan(q, k, v, li, lf, cfg.chunk_size)
+    h = h.reshape(B, L, d_in).astype(x.dtype)
+    h = rmsnorm(h, params["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bln,nd->bld", h, params["w_down"])
+    conv_tail = jnp.pad(
+        xb[:, -(cfg.conv_width - 1) :, :],
+        ((0, 0), (max(0, cfg.conv_width - 1 - L), 0), (0, 0)),
+    )
+    return out, {"C": state[0], "n": state[1], "m": state[2], "conv": conv_tail}
+
+
+def init_mlstm_state(cfg, batch, dtype):
+    d_in, H, dh = _mdims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.zeros((batch, H), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, d_in), dtype),
+    }
+
+
+def mlstm_decode(params, x, cfg, state):
+    """Recurrent mLSTM step: x (B, 1, d)."""
+    d_in, H, dh = _mdims(cfg)
+    B = x.shape[0]
+    up = jnp.einsum("bld,dn->bln", x, params["w_up"])
+    xb, z = up[..., :d_in], up[..., d_in:]
+    hist = jnp.concatenate([state["conv"], xb], axis=1)  # (B, W, d_in)
+    conv = jnp.einsum("bwc,wc->bc", hist, params["conv_w"]) + params["conv_b"]
+    xc = jax.nn.silu(conv)
+    q = (xc @ params["wq"]).reshape(B, H, dh).astype(jnp.float32)
+    k = (xc @ params["wk"]).reshape(B, H, dh).astype(jnp.float32)
+    v = (xb[:, 0] @ params["wv"]).reshape(B, H, dh).astype(jnp.float32)
+    gates = (xc @ params["w_gates"]).astype(jnp.float32) + params["b_gates"]
+    li, lf = gates[..., :H], jax.nn.log_sigmoid(gates[..., H:])
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    m = jnp.maximum(lf + state["m"], li)
+    fp = jnp.exp(lf + state["m"] - m)
+    ip = jnp.exp(li - m)
+    C = fp[..., None, None] * state["C"] + ip[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k, v
+    )
+    n = fp[..., None] * state["n"] + ip[..., None] * k
+    qs = q * scale
+    num = jnp.einsum("bhde,bhd->bhe", C, qs)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qs)), jnp.exp(-m))
+    h = (num / den[..., None]).reshape(B, 1, d_in).astype(x.dtype)
+    h = rmsnorm(h, params["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bln,nd->bld", h, params["w_down"])
+    return out, {"C": C, "n": n, "m": m, "conv": hist[:, 1:, :]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": dense_init(ks[0], (d, 4 * d), dtype),  # z, i, f, o
+        "r": dense_init(ks[1], (4, H, dh, dh), dtype, scale=0.3),
+        "b": jnp.zeros((4, d), jnp.float32),
+        "norm": jnp.ones((d,), dtype),
+        "w_out": dense_init(ks[2], (d, d), dtype),
+    }
+
+
+def _slstm_cell(params, wx_t, carry, cfg):
+    """One sLSTM step. wx_t: (B, 4, H, dh) precomputed input projections."""
+    H = cfg.n_heads
+    d = cfg.d_model
+    dh = d // H
+    c, n, h, m = carry  # (B,H,dh) x3, m (B,H,dh)
+    rh = jnp.einsum("ghde,bhe->bghd", params["r"].astype(jnp.float32), h)
+    pre = wx_t.astype(jnp.float32) + rh + params["b"].reshape(4, H, dh)
+    zt = jnp.tanh(pre[:, 0])
+    li = pre[:, 1]
+    lf = jax.nn.log_sigmoid(pre[:, 2])
+    o = jax.nn.sigmoid(pre[:, 3])
+    m_new = jnp.maximum(lf + m, li)
+    fp = jnp.exp(lf + m - m_new)
+    ip = jnp.exp(li - m_new)
+    c = fp * c + ip * zt
+    n = fp * n + ip
+    h = o * c / jnp.maximum(jnp.abs(n), 1e-6)
+    return (c, n, h, m_new)
+
+
+def slstm_apply(params, x, cfg):
+    B, L, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    wx = jnp.einsum("bld,dn->bln", x, params["w_in"]).reshape(B, L, 4, H, dh)
+    carry0 = init_slstm_state(cfg, B, x.dtype)
+
+    def step(carry, wx_t):
+        new = _slstm_cell(params, wx_t, carry, cfg)
+        return new, new[2]
+
+    carry, hs = jax.lax.scan(step, carry0, jnp.moveaxis(wx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, L, d).astype(x.dtype)
+    h = rmsnorm(h, params["norm"], cfg.norm_eps)
+    return jnp.einsum("bld,dn->bln", h, params["w_out"]), carry
+
+
+def init_slstm_state(cfg, batch, dtype):
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return (z, z, z, z)
+
+
+def slstm_decode(params, x, cfg, carry):
+    B = x.shape[0]
+    H = cfg.n_heads
+    d = cfg.d_model
+    dh = d // H
+    wx = (x[:, 0] @ params["w_in"]).reshape(B, 4, H, dh)
+    carry = _slstm_cell(params, wx, carry, cfg)
+    h = carry[2].reshape(B, 1, d).astype(x.dtype)
+    h = rmsnorm(h, params["norm"], cfg.norm_eps)
+    return jnp.einsum("bld,dn->bln", h, params["w_out"]), carry

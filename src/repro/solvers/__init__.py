@@ -1,0 +1,5 @@
+from repro.solvers.cg import pcg
+from repro.solvers.chebyshev import ChebyshevSmoother
+from repro.solvers.gmg import GMGPreconditioner, build_hierarchy
+
+__all__ = ["pcg", "ChebyshevSmoother", "GMGPreconditioner", "build_hierarchy"]

@@ -1,0 +1,78 @@
+"""Coarsest-level solver for the GMG hierarchy (paper Sec. 3.2).
+
+The paper assembles only the coarsest-level sparse matrix and solves it
+with inexact PCG preconditioned by BoomerAMG (rel_tol = sqrt(1e-4),
+max 10 iterations).  Classical AMG setup is CPU-shaped (irregular sparse
+graph coarsening); on the TPU target we keep the paper's architecture —
+assemble only the coarsest matrix — and swap the inner solver for either
+
+* ``cholesky``: a prefactorized dense Cholesky solve (exact, jit-friendly,
+  and cheap because the coarsest level is small by construction), or
+* ``pcg_jacobi``: the paper's inexact inner PCG with a Jacobi
+  preconditioner (matching tolerances), for larger coarse levels.
+
+The deviation is recorded in DESIGN.md (hardware-adaptation notes).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+import numpy as np
+import scipy.linalg as sla
+
+from repro.core.fa import SparseMatrix, assemble_sparse
+from repro.core.operators import ElasticityOperator
+from repro.solvers.cg import pcg
+
+__all__ = ["make_coarse_solver"]
+
+
+def make_coarse_solver(
+    op: ElasticityOperator,
+    method: str = "cholesky",
+    rel_tol: float = 1e-2,
+    max_iter: int = 10,
+) -> Callable:
+    """Return solve(b) -> x for the constrained coarsest-level system."""
+    space = op.space
+    ess = np.asarray(op.ess_mask)
+
+    if method == "cholesky":
+        qd_materials = op.materials
+        from repro.core.geometry import make_quadrature_data
+
+        qd = make_quadrature_data(space.mesh, space.tables, qd_materials)
+        sm: SparseMatrix = assemble_sparse(
+            space, qd, qd_materials, ess_mask=ess, dtype=op.dtype
+        )
+        dense = np.asarray(sm.csr.todense())
+        cho = sla.cho_factor(dense)
+        c_jnp = jnp.asarray(cho[0], dtype=op.dtype)
+        lower = cho[1]
+
+        def solve(b):
+            x = jsl.cho_solve((c_jnp, lower), b.reshape(-1))
+            return x.reshape(b.shape)
+
+        return solve
+
+    if method == "pcg_jacobi":
+        cop = op.constrained()
+        dinv = 1.0 / cop.diagonal()
+
+        def solve(b):
+            res = pcg(
+                cop,
+                b,
+                M=lambda r: dinv * r,
+                rel_tol=rel_tol,
+                maxiter=max_iter,
+            )
+            return res.x
+
+        return solve
+
+    raise ValueError(f"unknown coarse solver {method!r}")

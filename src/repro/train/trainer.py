@@ -1,0 +1,76 @@
+"""Training step factory: loss -> grad -> AdamW, pjit-ready.
+
+``make_train_step`` builds the jittable pure function
+``(state, batch) -> (state, metrics)``.  Distribution is supplied from
+outside (launch/train.py or launch/dryrun.py) via in/out shardings; the
+step itself is sharding-agnostic SPMD.  Buffer donation of ``state``
+makes the update in-place at the XLA level (parameters + moments are the
+dominant HBM residents at scale).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import init_params, loss_fn
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["TrainState", "train_state_init", "make_train_step"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jax.Array  # replicated scalar
+
+
+def train_state_init(key, cfg, opt_cfg: AdamWConfig | None = None) -> TrainState:
+    params = init_params(key, cfg)
+    return TrainState(
+        params=params,
+        opt_state=adamw_init(params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def make_train_step(
+    cfg,
+    opt_cfg: AdamWConfig,
+    *,
+    remat: bool = True,
+    attn_impl: str = "auto",
+    act_spec=None,
+    logits_spec=None,
+    grad_transform: Callable | None = None,
+) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    grad_transform: optional hook applied to the gradient pytree before
+    the optimizer — this is where gradient compression
+    (repro.distributed.compression) plugs in.  act_spec: sequence-
+    parallel activation constraint (see distributed.sharding.act_pspec).
+    """
+
+    def train_step(state: TrainState, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(
+            state.params, batch, cfg, remat=remat, attn_impl=attn_impl,
+            act_spec=act_spec, logits_spec=logits_spec,
+        )
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params, opt_state, om = adamw_update(
+            opt_cfg, state.params, grads, state.opt_state
+        )
+        new_state = TrainState(
+            params=params, opt_state=opt_state, step=state.step + 1
+        )
+        metrics = {"loss": loss, **om}
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,19 @@
+"""Shared test configuration.
+
+x64 is enabled globally: the FEM oracle comparisons need f64 tightness
+(the paper's CPU arithmetic is double precision); LM-model tests pass
+explicit f32 dtypes and are unaffected.  NOTE: no
+xla_force_host_platform_device_count here — smoke tests and benches see
+the real single device; only launch/dryrun.py fakes 512.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

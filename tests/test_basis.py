@@ -1,0 +1,58 @@
+"""1D basis/quadrature unit + property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.basis import basis_tables, gauss_points, gll_nodes, lagrange_tables
+
+
+@pytest.mark.parametrize("p", range(1, 11))
+def test_gll_nodes_structure(p):
+    x = gll_nodes(p)
+    assert len(x) == p + 1
+    assert x[0] == -1.0 and x[-1] == 1.0
+    assert np.all(np.diff(x) > 0)
+    # symmetric about 0
+    np.testing.assert_allclose(x, -x[::-1], atol=1e-13)
+
+
+@pytest.mark.parametrize("p", range(1, 10))
+def test_partition_of_unity(p):
+    tb = basis_tables(p)
+    # sum_i phi_i(x) = 1 and sum_i phi_i'(x) = 0 at all quadrature points
+    np.testing.assert_allclose(tb.B.sum(axis=1), 1.0, atol=1e-12)
+    np.testing.assert_allclose(tb.G.sum(axis=1), 0.0, atol=1e-10)
+
+
+@pytest.mark.parametrize("p", range(1, 9))
+def test_interpolation_reproduces_polynomials(p):
+    """Degree-p Lagrange basis interpolates any poly of degree <= p exactly."""
+    tb = basis_tables(p)
+    coeffs = np.random.default_rng(p).standard_normal(p + 1)
+    f = np.polynomial.polynomial.Polynomial(coeffs)
+    vals_at_nodes = f(tb.nodes)
+    interp = tb.B @ vals_at_nodes
+    np.testing.assert_allclose(interp, f(tb.qpts), atol=1e-11)
+    df = f.deriv()
+    np.testing.assert_allclose(tb.G @ vals_at_nodes, df(tb.qpts), atol=1e-10)
+
+
+@given(q=st.integers(1, 16), deg=st.integers(0, 8))
+@settings(max_examples=40, deadline=None)
+def test_gauss_quadrature_exactness(q, deg):
+    """q-point Gauss rule integrates degree <= 2q-1 exactly."""
+    if deg > 2 * q - 1:
+        return
+    pts, wts = gauss_points(q)
+    exact = 2.0 / (deg + 1) if deg % 2 == 0 else 0.0
+    np.testing.assert_allclose(np.sum(wts * pts**deg), exact, atol=1e-12)
+
+
+def test_lagrange_at_nodes_is_identity():
+    for p in (1, 3, 6):
+        tb = basis_tables(p)
+        B, G = lagrange_tables(tb.nodes, tb.nodes)
+        np.testing.assert_allclose(B, np.eye(p + 1), atol=1e-12)
+        # derivative rows sum to zero (differentiation matrix property)
+        np.testing.assert_allclose(G.sum(axis=1), 0.0, atol=1e-10)

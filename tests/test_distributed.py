@@ -1,0 +1,176 @@
+"""Distribution utilities: sharding rules, compression, elastic remesh.
+
+These run on the single real CPU device (spec-level checks, no SPMD
+compile); the pipeline-parallel test uses the interpreter-friendly
+jax.shard_map path only if >1 device is available, else it validates the
+schedule math.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.distributed.compression import (
+    int8_compress,
+    int8_decompress,
+    make_error_feedback_transform,
+    topk_compress,
+)
+from repro.distributed.pipeline import bubble_fraction, split_stages
+from repro.distributed.sharding import _spec_for, act_pspec, param_pspecs
+from repro.models.transformer import init_params
+
+LM_ARCHS = [a for a in ARCH_IDS if a != "elasticity"]
+
+# the production mesh axis sizes (dry-run meshes), for divisibility checks
+MESH_SINGLE = {"data": 16, "model": 16}
+MESH_MULTI = {"pod": 2, "data": 16, "model": 16}
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+@pytest.mark.parametrize("mesh_shape", [MESH_SINGLE, MESH_MULTI])
+def test_param_specs_divide_evenly(arch, mesh_shape):
+    """Every sharded dim of every FULL-config parameter divides its mesh
+    axes — the precondition for pjit argument shardings."""
+    cfg = get_config(arch)
+    pshape = jax.eval_shape(
+        lambda k: init_params(k, cfg), jax.random.PRNGKey(0)
+    )
+    specs = param_pspecs(pshape, _FakeMesh(mesh_shape))
+    flat_p = jax.tree.leaves(pshape)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    n_sharded = 0
+    for leaf, spec in zip(flat_p, flat_s):
+        for i, axes in enumerate(spec):
+            if axes is None:
+                continue
+            axes = (axes,) if isinstance(axes, str) else axes
+            total = int(np.prod([mesh_shape[a] for a in axes]))
+            assert leaf.shape[i] % total == 0, (arch, leaf.shape, spec)
+            n_sharded += 1
+    assert n_sharded > 0  # the rules actually fired
+
+
+def test_large_tensors_are_fully_sharded():
+    """Every parameter above 8M elements must shard over BOTH data and
+    model axes (FSDP+TP) — otherwise 32B-param states can't fit."""
+    cfg = get_config("qwen3_32b")
+    pshape = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+    specs = param_pspecs(pshape, _FakeMesh(MESH_SINGLE))
+    import jax.tree_util as jtu
+
+    for (kp, leaf), spec in zip(
+        jtu.tree_flatten_with_path(pshape)[0],
+        jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)),
+    ):
+        if int(np.prod(leaf.shape)) < 8 * 2**20:
+            continue
+        flat_axes = [a for part in spec if part for a in
+                     ((part,) if isinstance(part, str) else part)]
+        assert "model" in flat_axes and "data" in flat_axes, (
+            jtu.keystr(kp), leaf.shape, spec)
+
+
+def test_act_pspec():
+    assert act_pspec(("data", "model")) == P(("data",), "model", None)
+    assert act_pspec(("pod", "data", "model")) == P(
+        ("pod", "data"), "model", None)
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+def test_int8_roundtrip_error_bounded():
+    g = jnp.asarray(np.random.default_rng(0).standard_normal((64, 64)))
+    q, scale = int8_compress(g)
+    back = int8_decompress(q, scale)
+    assert q.dtype == jnp.int8
+    assert float(jnp.max(jnp.abs(back - g))) <= float(scale) * 0.5 + 1e-6
+
+
+def test_topk_keeps_largest():
+    g = jnp.asarray(np.arange(100, dtype=np.float64).reshape(10, 10))
+    out, mask = topk_compress(g, frac=0.1)
+    assert int(mask.sum()) == 10
+    assert float(out.max()) == 99.0
+    assert float(out[0, 0]) == 0.0
+
+
+def test_error_feedback_telescopes():
+    """Sum of compressed updates approaches sum of true gradients (the
+    error-feedback residual telescopes)."""
+    init_fn, tfm = make_error_feedback_transform("int8")
+    rng = np.random.default_rng(1)
+    g_true = [
+        {"w": jnp.asarray(rng.standard_normal((16, 16)) * 0.01)}
+        for _ in range(50)
+    ]
+    res = init_fn(g_true[0])
+    acc_comp = jnp.zeros((16, 16))
+    acc_true = jnp.zeros((16, 16))
+    for g in g_true:
+        comp, res = tfm(g, res)
+        acc_comp += comp["w"]
+        acc_true += g["w"]
+    # relative error of accumulated sum far below single-step quant error
+    rel = float(jnp.linalg.norm(acc_comp - acc_true) / jnp.linalg.norm(acc_true))
+    assert rel < 0.02, rel
+
+
+# ---------------------------------------------------------------------------
+# pipeline / elastic
+# ---------------------------------------------------------------------------
+def test_split_stages_shapes():
+    params = {"w": jnp.zeros((8, 3, 3))}
+    sp = split_stages(params, 4)
+    assert sp["w"].shape == (4, 2, 3, 3)
+
+
+def test_bubble_fraction():
+    assert bubble_fraction(1, 8) == 0.0
+    assert bubble_fraction(4, 12) == pytest.approx(3 / 15)
+
+
+def test_elastic_remesh_drops_stragglers():
+    from repro.distributed.elastic import elastic_remesh, simulate_failures
+
+    devs = list(range(64))  # fake device handles
+    alive = simulate_failures(devs, 3)  # 61 left
+    mesh = elastic_remesh(alive, model_parallel=16)
+    assert mesh.shape["model"] == 16
+    assert mesh.shape["data"] == 3  # 48 devices used, 13 dropped
+    assert mesh.size == 48
+
+
+def test_elastic_remesh_shrinks_tp_last():
+    from repro.distributed.elastic import elastic_remesh
+
+    mesh = elastic_remesh(list(range(8)), model_parallel=16)
+    assert mesh.shape["model"] == 8
+    assert mesh.shape["data"] == 1
+
+
+def test_watchdog_fires_and_counts():
+    import time
+
+    from repro.distributed.elastic import StepWatchdog
+
+    fired = []
+    wd = StepWatchdog(timeout_s=0.05, on_timeout=lambda t: fired.append(t))
+    with wd.step():
+        time.sleep(0.12)
+    assert wd.timeouts == 1 and len(fired) == 1
+    with wd.step():
+        pass
+    assert wd.timeouts == 1
+    assert wd.slowest > 0.1

@@ -1,0 +1,98 @@
+"""Mesh / space / transfer / geometry infrastructure tests."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.geometry import make_quadrature_data, MATERIALS_BEAM
+from repro.core.basis import basis_tables
+from repro.fem.mesh import beam_hex
+from repro.fem.space import H1Space
+from repro.fem.transfer import make_transfer
+
+
+def test_mesh_refinement_counts():
+    m = beam_hex()
+    assert m.nelem == 8
+    r = m.refined()
+    assert r.nelem == 64
+    assert r.refined().nelem == 512
+
+
+def test_beam_two_materials():
+    m = beam_hex().refined()
+    # attribute 1 on x < L/2, attribute 2 on x >= L/2 (MFEM ex2 convention)
+    attrs = np.asarray(m.attributes())
+    assert set(attrs.tolist()) == {1, 2}
+    assert (attrs == 1).sum() == (attrs == 2).sum()
+
+
+@pytest.mark.parametrize("p", [1, 2, 3])
+def test_evec_roundtrip_multiplicity(p):
+    """G^T G == diag(multiplicity): scatter(gather(x)) multiplies each node
+    by the number of elements sharing it."""
+    space = H1Space(beam_hex(2, 1, 1), p)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((space.nscalar, 3)))
+    y = space.scatter_add(space.to_evec(x))
+    mult = jnp.asarray(space.dof_multiplicity, x.dtype)[:, None]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x * mult), rtol=1e-12)
+
+
+def test_quadrature_data_affine_constant():
+    m = beam_hex().refined()
+    tb = basis_tables(2)
+    qd = make_quadrature_data(m, tb, MATERIALS_BEAM)
+    # uniform box refinement: J is mesh-constant
+    assert qd.jinv.ndim == 2
+    # lambda_w carries the 50:1 two-material contrast; per-element means
+    # divide out the (element-independent) w*detJ quadrature factor.
+    lw = np.asarray(qd.lambda_w).reshape(m.nelem, -1).mean(axis=1)
+    assert lw.max() / lw.min() == pytest.approx(50.0, rel=1e-10)
+
+
+@pytest.mark.parametrize("pc,pf", [(1, 2), (2, 4), (4, 8)])
+def test_p_prolongation_exact_on_coarse_polys(pc, pf):
+    """p-transfer must reproduce degree-pc polynomials exactly."""
+    mesh = beam_hex()
+    coarse, fine = H1Space(mesh, pc), H1Space(mesh, pf)
+    t = make_transfer(coarse, fine)
+    xc, yc, zc = coarse.node_coords_1d
+    Xc = coarse.node_coords()
+    f = Xc[:, 0] ** pc + 2.0 * Xc[:, 1] - Xc[:, 2] ** min(pc, 2)
+    uc = jnp.asarray(np.stack([f, -f, 0.5 * f], axis=1))
+    uf = t.prolong(uc)
+    Xf = fine.node_coords()
+    ff = Xf[:, 0] ** pc + 2.0 * Xf[:, 1] - Xf[:, 2] ** min(pc, 2)
+    np.testing.assert_allclose(np.asarray(uf)[:, 0], ff, atol=1e-9)
+
+
+def test_h_prolongation_exact_on_linears():
+    mesh = beam_hex()
+    coarse = H1Space(mesh, 1)
+    fine = H1Space(mesh.refined(), 1)
+    t = make_transfer(coarse, fine)
+    Xc, Xf = coarse.node_coords(), fine.node_coords()
+    uc = jnp.asarray(np.stack([Xc[:, 0], Xc[:, 1], Xc[:, 2]], axis=1))
+    uf = t.prolong(uc)
+    np.testing.assert_allclose(np.asarray(uf), Xf, atol=1e-10)
+
+
+def test_restriction_is_prolongation_transpose():
+    mesh = beam_hex()
+    coarse, fine = H1Space(mesh, 1), H1Space(mesh, 2)
+    t = make_transfer(coarse, fine)
+    rng = np.random.default_rng(2)
+    xc = jnp.asarray(rng.standard_normal((coarse.nscalar, 3)))
+    yf = jnp.asarray(rng.standard_normal((fine.nscalar, 3)))
+    lhs = float(jnp.vdot(t.prolong(xc), yf))
+    rhs = float(jnp.vdot(xc, t.restrict(yf)))
+    assert abs(lhs - rhs) < 1e-9 * max(abs(lhs), 1.0)
+
+
+def test_traction_rhs_total_force():
+    """Assembled traction RHS must sum to traction * face area."""
+    space = H1Space(beam_hex().refined(), 2)
+    t = (0.0, 0.0, -1e-2)
+    F = space.traction_rhs("x1", t)
+    area = 1.0  # beam cross-section is 1 x 1
+    np.testing.assert_allclose(F.sum(axis=0), np.asarray(t) * area, atol=1e-12)

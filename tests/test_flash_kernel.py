@@ -1,0 +1,60 @@
+"""Flash-attention Pallas kernel vs oracle: shapes, dtypes, GQA, SWA."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention, pick_block
+from repro.kernels.flash_attention.ref import flash_ref
+
+
+def _qkv(B, S, H, K, D, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, K, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, K, D), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("B,S,H,K,D", [
+    (2, 128, 4, 2, 16),
+    (1, 256, 8, 8, 32),   # MHA
+    (2, 64, 8, 1, 8),     # MQA
+    (1, 512, 4, 2, 64),
+])
+def test_flash_matches_ref(B, S, H, K, D):
+    q, k, v = _qkv(B, S, H, K, D, jnp.float32)
+    out = flash_attention(q, k, v, block_q=min(64, S), block_k=min(64, S))
+    ref = flash_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [16, 48, 128])
+def test_flash_sliding_window(window):
+    q, k, v = _qkv(2, 128, 4, 2, 16, jnp.float32, seed=1)
+    out = flash_attention(q, k, v, window=window, block_q=32, block_k=32)
+    ref = flash_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_flash_bf16():
+    q, k, v = _qkv(1, 128, 4, 4, 32, jnp.bfloat16, seed=2)
+    out = flash_attention(q, k, v, block_q=64, block_k=64)
+    ref = flash_ref(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=3e-2
+    )
+
+
+def test_block_shape_invariance():
+    q, k, v = _qkv(1, 256, 4, 2, 16, jnp.float32, seed=3)
+    o1 = flash_attention(q, k, v, block_q=32, block_k=64)
+    o2 = flash_attention(q, k, v, block_q=128, block_k=32)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+def test_pick_block():
+    assert pick_block(4096) == 128
+    assert pick_block(96) == 96
+    assert pick_block(100, 64) == 50
