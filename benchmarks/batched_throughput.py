@@ -1,0 +1,132 @@
+"""Batched-solve throughput: scenarios/sec of the ElasticityService vs
+the sequential solve_beam driver (p=2, refine=1 beam benchmark).
+
+For each batch size B the service solves one warm generation of B mixed
+scenarios (the first call pays hierarchy build + compile; the timed
+calls reuse the cached compiled program, which is the steady-state
+serving regime).  The sequential baseline is solve_beam called once per
+scenario — it re-builds the hierarchy and re-traces every call, exactly
+what the service amortizes.
+
+    PYTHONPATH=src python -m benchmarks.batched_throughput [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np  # noqa: E402
+
+from benchmarks.common import fmt_table  # noqa: E402
+from repro.launch.solve import solve_beam  # noqa: E402
+from repro.serve.elasticity_service import (  # noqa: E402
+    ElasticityService,
+    SolveRequest,
+)
+
+P, REFINE = 2, 1
+
+
+def make_requests(n: int, rel_tol: float = 1e-6) -> list[SolveRequest]:
+    return [
+        SolveRequest(
+            p=P,
+            refine=REFINE,
+            materials={1: (50.0 + 5 * (i % 3), 50.0), 2: (1.0 + 0.5 * (i % 2), 1.0)},
+            traction=(0.0, 0.0, -1e-2 * (1 + 0.1 * (i % 4))),
+            rel_tol=rel_tol,
+        )
+        for i in range(n)
+    ]
+
+
+def bench_batched(batch: int, repeats: int) -> dict:
+    service = ElasticityService(max_batch=batch)
+    # Warm: builds the hierarchy and compiles the batched program.
+    t0 = time.perf_counter()
+    service.solve(make_requests(batch))
+    t_warm = time.perf_counter() - t0
+    # Steady state: same key -> cached program, setup must be ~0.
+    times, setups = [], []
+    for _ in range(repeats):
+        reqs = make_requests(batch)
+        t0 = time.perf_counter()
+        reports = service.solve(reqs)
+        times.append(time.perf_counter() - t0)
+        setups.append(reports[0].t_setup)
+        assert all(r.converged for r in reports)
+    t = float(np.median(times))
+    return {
+        "batch": batch,
+        "scenarios_per_s": batch / t,
+        "t_generation_s": t,
+        "t_warm_s": t_warm,
+        "t_setup_cached_s": float(np.median(setups)),
+    }
+
+
+def bench_sequential(n: int) -> dict:
+    t0 = time.perf_counter()
+    for req in make_requests(n):
+        rep = solve_beam(
+            req.p,
+            req.refine,
+            assembly="paop",
+            rel_tol=req.rel_tol,
+            materials=req.materials,
+            traction=req.traction,
+        )
+        assert rep.final_rel_norm < req.rel_tol
+    t = time.perf_counter() - t0
+    return {
+        "batch": "sequential",
+        "scenarios_per_s": n / t,
+        "t_generation_s": t / n,
+        "t_warm_s": 0.0,
+        "t_setup_cached_s": float("nan"),
+    }
+
+
+def run(fast: bool = False, quick: bool = False) -> list[dict]:
+    batches = [1, 4] if quick else ([1, 4, 16] if fast else [1, 4, 16, 64])
+    n_seq = 2 if quick else 4
+    repeats = 1 if quick else 3
+    rows = [bench_sequential(n_seq)]
+    seq_rate = rows[0]["scenarios_per_s"]
+    for b in batches:
+        row = bench_batched(b, repeats)
+        row["speedup_vs_sequential"] = row["scenarios_per_s"] / seq_rate
+        rows.append(row)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: batches {1, 4}, single repeat")
+    ap.add_argument("--fast", action="store_true", help="skip batch 64")
+    args = ap.parse_args()
+    rows = run(fast=args.fast, quick=args.quick)
+    print(
+        fmt_table(
+            rows,
+            [
+                "batch",
+                "scenarios_per_s",
+                "t_generation_s",
+                "t_warm_s",
+                "t_setup_cached_s",
+                "speedup_vs_sequential",
+            ],
+            title=f"Batched GMG-PCG throughput (p={P}, refine={REFINE}, CPU)",
+        )
+    )
+
+
+if __name__ == "__main__":
+    main()

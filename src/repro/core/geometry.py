@@ -19,7 +19,14 @@ import numpy as np
 from repro.core.basis import BasisTables
 from repro.fem.mesh import HexMesh
 
-__all__ = ["QuadratureData", "make_quadrature_data", "MATERIALS_BEAM"]
+__all__ = [
+    "QuadratureData",
+    "QuadratureGeometry",
+    "quadrature_geometry",
+    "material_fields",
+    "make_quadrature_data",
+    "MATERIALS_BEAM",
+]
 
 # Paper Sec. 5.1.4: attribute 1 -> lambda = mu = 50, attribute 2 -> 1.
 MATERIALS_BEAM = {1: (50.0, 50.0), 2: (1.0, 1.0)}
@@ -40,24 +47,48 @@ class QuadratureData:
     detj: float
 
 
-def make_quadrature_data(
-    mesh: HexMesh,
-    tables: BasisTables,
-    materials: dict[int, tuple[float, float]] | None = None,
-    dtype=np.float64,
-) -> QuadratureData:
-    """Build the stored PA data for an affine box mesh."""
-    materials = materials or MATERIALS_BEAM
-    q1d = tables.q1d
+@dataclasses.dataclass
+class QuadratureGeometry:
+    """Material-independent part of the stored PA data: the weighted
+    reference->physical geometry factors shared by every scenario."""
+
+    # (Q1D, Q1D, Q1D): w_q * det(J), separable quadrature weights times
+    # the (per-element-constant, here globally constant) Jacobian det.
+    w_detj: Any
+    jinv: Any  # (3, 3)
+    detj: float
+
+
+def quadrature_geometry(
+    mesh: HexMesh, tables: BasisTables, dtype=np.float64
+) -> QuadratureGeometry:
+    """Geometry factors of the D-data for an affine box mesh.  Splitting
+    these from the material coefficients lets batched operators rebind
+    per-scenario (lambda, mu) fields without redoing any geometry."""
     J = mesh.jacobian()
     detj = float(np.linalg.det(J))
     if detj <= 0:
         raise ValueError("mesh Jacobian must have positive determinant")
     jinv = np.linalg.inv(J)
+    # Separable quadrature weights w(qz, qy, qx) = w_z w_y w_x.
+    w = tables.qwts
+    w3 = w[:, None, None] * w[None, :, None] * w[None, None, :]  # (Q,Q,Q)
+    return QuadratureGeometry(
+        w_detj=(w3 * detj).astype(dtype), jinv=jinv.astype(dtype), detj=detj
+    )
 
+
+def material_fields(
+    mesh: HexMesh,
+    materials: dict[int, tuple[float, float]] | None = None,
+    dtype=np.float64,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Per-element (lambda_e, mu_e) coefficient fields from an
+    attribute -> (lambda, mu) table, each of shape (nelem,)."""
+    materials = materials or MATERIALS_BEAM
     attr = mesh.attributes()
-    lam_e = np.empty(mesh.nelem)
-    mu_e = np.empty(mesh.nelem)
+    lam_e = np.empty(mesh.nelem, dtype=dtype)
+    mu_e = np.empty(mesh.nelem, dtype=dtype)
     for a, (lam, mu) in materials.items():
         sel = attr == a
         lam_e[sel] = lam
@@ -65,13 +96,22 @@ def make_quadrature_data(
     known = np.isin(attr, list(materials))
     if not known.all():
         raise ValueError(f"elements with unknown attributes: {set(attr[~known])}")
+    return lam_e, mu_e
 
-    # Separable quadrature weights w(qz, qy, qx) = w_z w_y w_x.
-    w = tables.qwts
-    w3 = w[:, None, None] * w[None, :, None] * w[None, None, :]  # (Q,Q,Q)
-    lam_w = (lam_e[:, None, None, None] * (w3 * detj)).astype(dtype)
-    mu_w = (mu_e[:, None, None, None] * (w3 * detj)).astype(dtype)
+
+def make_quadrature_data(
+    mesh: HexMesh,
+    tables: BasisTables,
+    materials: dict[int, tuple[float, float]] | None = None,
+    dtype=np.float64,
+) -> QuadratureData:
+    """Build the stored PA data for an affine box mesh."""
+    q1d = tables.q1d
+    geom = quadrature_geometry(mesh, tables, dtype=dtype)
+    lam_e, mu_e = material_fields(mesh, materials, dtype=dtype)
+    lam_w = (lam_e[:, None, None, None] * geom.w_detj).astype(dtype)
+    mu_w = (mu_e[:, None, None, None] * geom.w_detj).astype(dtype)
     assert lam_w.shape == (mesh.nelem, q1d, q1d, q1d)
     return QuadratureData(
-        lambda_w=lam_w, mu_w=mu_w, jinv=jinv.astype(dtype), detj=detj
+        lambda_w=lam_w, mu_w=mu_w, jinv=geom.jinv, detj=geom.detj
     )

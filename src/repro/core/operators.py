@@ -10,10 +10,21 @@ solvers:
 ``apply(x)`` acts on the unconstrained L-vector (nscalar, 3);
 ``constrained()`` wraps it with MFEM ConstrainedOperator semantics and
 the matrix-free diagonal for the Chebyshev-Jacobi smoother.
+
+Scenario batching: ``materials`` may also be a *sequence* of
+attribute->(lambda, mu) dicts, or a pair of per-element coefficient
+arrays ``(lam_e, mu_e)`` of shape (nelem,) or (S, nelem).  With a
+leading scenario axis the operator acts on (S, nscalar, 3) L-vectors;
+internally the scenario axis is folded into the element axis so every
+PA kernel — including the Pallas one — runs unchanged on a grid S times
+larger.  ``with_materials`` rebinds the (traceable) material fields
+without redoing any geometry, which is what lets a jitted batched solve
+take materials as runtime arguments.
 """
 
 from __future__ import annotations
 
+import copy
 import functools
 from typing import Any
 
@@ -27,11 +38,21 @@ from repro.core import pa_baseline as _base
 from repro.core import pa_sumfact as _sf
 from repro.core import paop as _paop
 from repro.core.basis import basis_tables
-from repro.core.geometry import MATERIALS_BEAM, make_quadrature_data
+from repro.core.geometry import (
+    MATERIALS_BEAM,
+    make_quadrature_data,
+    material_fields,
+    quadrature_geometry,
+)
 from repro.fem.bc import ConstrainedOperator
 from repro.fem.space import H1Space
 
-__all__ = ["ElasticityOperator", "ASSEMBLY_LEVELS"]
+__all__ = ["ElasticityOperator", "ASSEMBLY_LEVELS", "DEFER_MATERIALS"]
+
+# Sentinel: build the operator as a geometry/tables carrier only; material
+# fields are bound later via with_materials (e.g. inside a jitted batched
+# solve).  Skips allocating placeholder (nelem, Q^3) quadrature buffers.
+DEFER_MATERIALS = "defer"
 
 ASSEMBLY_LEVELS = (
     "fa",
@@ -58,28 +79,107 @@ class ElasticityOperator:
         self.space = space
         self.assembly = assembly
         self.dtype = dtype
-        self.materials = materials or MATERIALS_BEAM
         self.tables = space.tables
         self._pallas_interpret = pallas_interpret
 
-        qd = make_quadrature_data(space.mesh, self.tables, self.materials)
-        self.lam_w = jnp.asarray(qd.lambda_w, dtype=dtype)
-        self.mu_w = jnp.asarray(qd.mu_w, dtype=dtype)
-        self.jinv = jnp.asarray(qd.jinv, dtype=dtype)
-        self.detj = qd.detj
+        geom = quadrature_geometry(space.mesh, self.tables)
+        self.w_detj = jnp.asarray(geom.w_detj, dtype=dtype)  # (Q,Q,Q)
+        self.jinv = jnp.asarray(geom.jinv, dtype=dtype)
+        self.detj = geom.detj
         self.B = jnp.asarray(self.tables.B, dtype=dtype)
         self.G = jnp.asarray(self.tables.G, dtype=dtype)
         self.ess_mask = space.essential_mask(ess_faces)
 
+        if isinstance(materials, str) and materials == DEFER_MATERIALS:
+            if assembly == "fa":
+                raise ValueError("assembly='fa' cannot defer materials")
+            self.materials = None
+            self.nbatch = None
+            self.lam_w = self.mu_w = None
+        else:
+            self.materials = (
+                materials if materials is not None else MATERIALS_BEAM
+            )
+            lam_e, mu_e = self._normalize_materials(self.materials)
+            self._bind_materials(lam_e, mu_e)
+
         self._sparse: _fa.SparseMatrix | None = None
         if assembly == "fa":
-            qd64 = qd  # setup in float64 regardless of operator dtype
+            if self.nbatch is not None or not isinstance(self.materials, dict):
+                raise ValueError(
+                    "assembly='fa' supports only a single attribute->"
+                    "(lambda, mu) dict; use a matrix-free level for "
+                    "scenario-batched or per-element materials"
+                )
+            qd = make_quadrature_data(
+                space.mesh, self.tables, self.materials
+            )  # setup in float64 regardless of operator dtype
             self._sparse = _fa.assemble_sparse(
-                space, qd64, self.materials, ess_mask=None, dtype=dtype
+                space, qd, self.materials, ess_mask=None, dtype=dtype
             )
+
+    # -- materials -----------------------------------------------------------
+    def _normalize_materials(self, materials):
+        """Normalize to per-element coefficient fields (lam_e, mu_e) of
+        shape (nelem,) or (S, nelem)."""
+        mesh = self.space.mesh
+        if isinstance(materials, dict):
+            return material_fields(mesh, materials)
+        if isinstance(materials, (list, tuple)) and materials and all(
+            isinstance(m, dict) for m in materials
+        ):
+            fields = [material_fields(mesh, m) for m in materials]
+            return (
+                np.stack([f[0] for f in fields]),
+                np.stack([f[1] for f in fields]),
+            )
+        try:
+            lam_e, mu_e = materials
+        except (TypeError, ValueError):
+            raise TypeError(
+                "materials must be a dict, a sequence of dicts, or a "
+                f"(lam_e, mu_e) array pair; got {type(materials)!r}"
+            ) from None
+        return lam_e, mu_e
+
+    def _bind_materials(self, lam_e, mu_e):
+        """Set lam_w/mu_w from coefficient fields (traceable: fields may be
+        jax tracers inside a jitted batched solve)."""
+        lam_e = jnp.asarray(lam_e, dtype=self.dtype)
+        mu_e = jnp.asarray(mu_e, dtype=self.dtype)
+        if lam_e.shape != mu_e.shape or lam_e.shape[-1] != self.space.nelem:
+            raise ValueError(
+                f"material fields {lam_e.shape}/{mu_e.shape} do not match "
+                f"nelem={self.space.nelem}"
+            )
+        if lam_e.ndim == 2:  # (S, nelem): fold scenarios into elements
+            self.nbatch = lam_e.shape[0]
+            lam_e = lam_e.reshape(-1)
+            mu_e = mu_e.reshape(-1)
+        elif lam_e.ndim == 1:
+            self.nbatch = None
+        else:
+            raise ValueError(f"material fields must be 1D or 2D: {lam_e.shape}")
+        self.lam_w = lam_e[:, None, None, None] * self.w_detj
+        self.mu_w = mu_e[:, None, None, None] * self.w_detj
+
+    def with_materials(self, lam_e, mu_e) -> "ElasticityOperator":
+        """A shallow copy with new material coefficient fields ((nelem,) or
+        (S, nelem)); geometry, tables and masks are shared.  Safe to call
+        under jit with traced fields (matrix-free levels only)."""
+        if self.assembly == "fa":
+            raise ValueError("with_materials is matrix-free only (not 'fa')")
+        new = copy.copy(self)
+        new.materials = None
+        new._bind_materials(lam_e, mu_e)
+        return new
 
     # -- raw action ---------------------------------------------------------
     def _apply_evec(self, x_e):
+        if self.lam_w is None:
+            raise ValueError(
+                "materials are deferred; bind them with with_materials first"
+            )
         a = self.assembly
         if a == "pa_baseline":
             g3d = _base.dense_grad_table(self.space.p, dtype=self.dtype)
@@ -111,10 +211,17 @@ class ElasticityOperator:
         raise AssertionError(a)
 
     def apply(self, x):
-        """Unconstrained y = A x on the L-vector (nscalar, 3)."""
+        """Unconstrained y = A x on the L-vector (nscalar, 3), or the
+        scenario batch (S, nscalar, 3) for a batched operator."""
         if self.assembly == "fa":
             y = self._sparse.matvec(x.reshape(-1))
             return y.reshape(x.shape)
+        if self.nbatch is not None:
+            s, ne = self.nbatch, self.space.nelem
+            x_e = jax.vmap(self.space.to_evec)(x)  # (S, ne, 3, D, D, D)
+            y_e = self._apply_evec(x_e.reshape((s * ne,) + x_e.shape[2:]))
+            y_e = y_e.reshape((s, ne) + y_e.shape[1:])
+            return jax.vmap(self.space.scatter_add)(y_e)
         x_e = self.space.to_evec(x)
         y_e = self._apply_evec(x_e)
         return self.space.scatter_add(y_e)
@@ -124,11 +231,20 @@ class ElasticityOperator:
 
     # -- diagonal -------------------------------------------------------------
     def diagonal(self):
-        """Assembled operator diagonal as an L-vector (nscalar, 3)."""
+        """Assembled operator diagonal as an L-vector (nscalar, 3), with a
+        leading scenario axis for a batched operator."""
         if self.assembly == "fa":
             d = jnp.asarray(self._sparse.csr.diagonal(), dtype=self.dtype)
             return d.reshape(-1, 3)
+        if self.lam_w is None:
+            raise ValueError(
+                "materials are deferred; bind them with with_materials first"
+            )
         d_e = _diag.element_diagonal(self.lam_w, self.mu_w, self.jinv, self.B, self.G)
+        if self.nbatch is not None:
+            s, ne = self.nbatch, self.space.nelem
+            d_e = d_e.reshape((s, ne) + d_e.shape[1:])
+            return jax.vmap(self.space.scatter_add)(d_e)
         return self.space.scatter_add(d_e)
 
     # -- constrained view -------------------------------------------------------

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from repro.core.contract import backward_grad_t, forward_grad
 from repro.core.voigt import VOIGT_INDEX, stress_voigt
 
-__all__ = ["paop_element", "paop_apply"]
+__all__ = ["paop_element", "paop_apply", "paop_apply_scenarios"]
 
 
 def paop_element(x_e, lam_w, mu_w, jinv, B, G):
@@ -61,3 +61,28 @@ def paop_apply(x_e, lam_w, mu_w, jinv, B, G):
     return jax.vmap(paop_element, in_axes=(0, 0, 0, 0, None, None))(
         x_e, lam_w, mu_w, jinv, B, G
     )
+
+
+def paop_apply_scenarios(x_se, lam_w, mu_w, jinv, B, G):
+    """Fused PAop action over a batch of scenarios sharing one mesh.
+
+    x_se:          (S, nelem, 3, D1D, D1D, D1D)
+    lam_w / mu_w:  (S, nelem, Q1D, Q1D, Q1D)   per-scenario material data
+    jinv:          (3, 3)                       shared affine geometry
+
+    The scenario axis is folded into the element axis, so the element
+    kernel (and, one level up, the Pallas grid) runs unchanged — just
+    S times larger.  This is how batched operators keep the paper's
+    single-kernel dataflow while amortizing launch/compile overhead
+    across scenarios.
+    """
+    s, ne = x_se.shape[:2]
+    y = paop_apply(
+        x_se.reshape((s * ne,) + x_se.shape[2:]),
+        lam_w.reshape((s * ne,) + lam_w.shape[2:]),
+        mu_w.reshape((s * ne,) + mu_w.shape[2:]),
+        jinv,
+        B,
+        G,
+    )
+    return y.reshape((s, ne) + y.shape[1:])

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.sharding import shard_map
+
 __all__ = ["pipeline_apply", "split_stages", "bubble_fraction"]
 
 
@@ -95,7 +97,7 @@ def pipeline_apply(
         return out.reshape(x_full.shape)
 
     spec_p = jax.tree.map(lambda _: P(axis), stage_params)
-    fn = jax.shard_map(
+    fn = shard_map(
         staged,
         mesh=mesh,
         in_specs=(spec_p, P()),

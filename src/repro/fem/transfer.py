@@ -53,7 +53,12 @@ def h_transfer_1d(n_el_coarse: int, p: int) -> np.ndarray:
 
 @dataclasses.dataclass
 class Transfer:
-    """Separable 3D transfer between two H1 spaces on the same box."""
+    """Separable 3D transfer between two H1 spaces on the same box.
+
+    Both directions accept an optional leading scenario-batch axis:
+    (nscalar, 3) or (S, nscalar, 3) — the 1D contractions are written
+    with einsum ellipses, so a batched V-cycle threads through unchanged.
+    """
 
     px: Any  # (Nx_f, Nx_c)
     py: Any
@@ -62,22 +67,24 @@ class Transfer:
     grid_f: tuple[int, int, int]
 
     def prolong(self, u_c):
-        """(nscalar_c, 3) -> (nscalar_f, 3)."""
+        """(..., nscalar_c, 3) -> (..., nscalar_f, 3)."""
         nxc, nyc, nzc = self.grid_c
-        u = u_c.reshape(nzc, nyc, nxc, 3)
-        u = jnp.einsum("zyxc,Xx->zyXc", u, self.px)
-        u = jnp.einsum("zyXc,Yy->zYXc", u, self.py)
-        u = jnp.einsum("zYXc,Zz->ZYXc", u, self.pz)
-        return u.reshape(-1, 3)
+        lead = u_c.shape[:-2]
+        u = u_c.reshape(lead + (nzc, nyc, nxc, 3))
+        u = jnp.einsum("...zyxc,Xx->...zyXc", u, self.px)
+        u = jnp.einsum("...zyXc,Yy->...zYXc", u, self.py)
+        u = jnp.einsum("...zYXc,Zz->...ZYXc", u, self.pz)
+        return u.reshape(lead + (-1, 3))
 
     def restrict(self, r_f):
-        """Transpose: (nscalar_f, 3) -> (nscalar_c, 3)."""
+        """Transpose: (..., nscalar_f, 3) -> (..., nscalar_c, 3)."""
         nxf, nyf, nzf = self.grid_f
-        r = r_f.reshape(nzf, nyf, nxf, 3)
-        r = jnp.einsum("ZYXc,Zz->zYXc", r, self.pz)
-        r = jnp.einsum("zYXc,Yy->zyXc", r, self.py)
-        r = jnp.einsum("zyXc,Xx->zyxc", r, self.px)
-        return r.reshape(-1, 3)
+        lead = r_f.shape[:-2]
+        r = r_f.reshape(lead + (nzf, nyf, nxf, 3))
+        r = jnp.einsum("...ZYXc,Zz->...zYXc", r, self.pz)
+        r = jnp.einsum("...zYXc,Yy->...zyXc", r, self.py)
+        r = jnp.einsum("...zyXc,Xx->...zyxc", r, self.px)
+        return r.reshape(lead + (-1, 3))
 
 
 def make_transfer(coarse: H1Space, fine: H1Space, dtype=jnp.float64) -> Transfer:

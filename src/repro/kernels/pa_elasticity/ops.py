@@ -12,7 +12,12 @@ import jax.numpy as jnp
 
 from repro.kernels.pa_elasticity.pa_elasticity import pa_elasticity_pallas
 
-__all__ = ["pa_elasticity", "elements_per_block", "block_workingset_bytes"]
+__all__ = [
+    "pa_elasticity",
+    "elements_per_block",
+    "clamp_elements_per_block",
+    "block_workingset_bytes",
+]
 
 # Target VMEM footprint per grid step. Real v5e VMEM is ~16 MB; leave
 # headroom for double-buffered input/output blocks.
@@ -35,14 +40,33 @@ def block_workingset_bytes(p: int, eb: int, itemsize: int = 4) -> int:
     return per_elem * eb * itemsize
 
 
+def clamp_elements_per_block(eb: int, ne: int) -> int:
+    """Clamp a requested elements-per-block to the element count.
+
+    Never returns a block larger than ``ne`` (so padding is bounded below
+    2x instead of the >10x blow-up an unclamped 128-block causes on e.g.
+    ne=12), and prefers the largest divisor of ``ne`` that is at least
+    half the clamped block — zero padding without shrinking the block
+    enough to hurt occupancy.
+    """
+    eb = max(1, min(eb, ne))
+    for d in range(eb, 0, -1):
+        if ne % d == 0:
+            if 2 * d > eb:
+                return d
+            break
+    return eb
+
+
 def elements_per_block(p: int, ne: int, itemsize: int = 4) -> int:
-    """Largest lane-aligned EB whose working set fits the VMEM budget."""
+    """Largest lane-aligned EB whose working set fits the VMEM budget,
+    clamped to the element count."""
     eb = _LANE
     while block_workingset_bytes(p, 2 * eb, itemsize) <= VMEM_BUDGET_BYTES:
         eb *= 2
     while eb > 8 and block_workingset_bytes(p, eb, itemsize) > VMEM_BUDGET_BYTES:
         eb //= 2
-    return min(eb, max(8, ne))
+    return clamp_elements_per_block(eb, ne)
 
 
 def pa_elasticity(x_e, lam_w, mu_w, jinv, B, G, *, eb=None, interpret=True):
@@ -66,7 +90,7 @@ def pa_elasticity(x_e, lam_w, mu_w, jinv, B, G, *, eb=None, interpret=True):
     itemsize = jnp.dtype(x_e.dtype).itemsize
     if eb is None:
         eb = elements_per_block(p, ne, itemsize)
-    eb = min(eb, ne) if ne % min(eb, ne) == 0 else eb
+    eb = clamp_elements_per_block(eb, ne)
 
     pad = (-ne) % eb
     xt = jnp.moveaxis(x_e, 0, -1)  # (3, D, D, D, NE)

@@ -57,6 +57,8 @@ def solve_beam(
     dtype=jnp.float64,
     keep_solution: bool = False,
     pallas_interpret: bool = True,
+    materials: dict | None = None,
+    traction=TRACTION,
 ) -> SolveReport:
     coarse_mesh = coarse_mesh if coarse_mesh is not None else beam_hex()
     t0 = time.perf_counter()
@@ -67,7 +69,7 @@ def solve_beam(
         n_h_refine,
         p,
         assembly=assembly,
-        materials=MATERIALS_BEAM,
+        materials=materials if materials is not None else MATERIALS_BEAM,
         dtype=dtype,
         coarse_method=coarse_method,
         pallas_interpret=pallas_interpret,
@@ -77,7 +79,7 @@ def solve_beam(
 
     # --- form linear system: traction RHS + essential elimination
     b = jnp.asarray(
-        fine.space.traction_rhs("x1", TRACTION), dtype=dtype
+        fine.space.traction_rhs("x1", traction), dtype=dtype
     )
     b = eliminate_rhs(fine.operator.apply, fine.ess_mask, b)
     t2 = time.perf_counter()

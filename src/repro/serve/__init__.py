@@ -1,1 +1,6 @@
+from repro.serve.elasticity_service import (  # noqa: F401
+    ElasticityService,
+    SolveReport,
+    SolveRequest,
+)
 from repro.serve.engine import ServeEngine  # noqa: F401

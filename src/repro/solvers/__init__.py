@@ -1,5 +1,14 @@
+from repro.solvers.batched import BatchedGMGSolver, BPCGResult, bpcg
 from repro.solvers.cg import pcg
 from repro.solvers.chebyshev import ChebyshevSmoother
 from repro.solvers.gmg import GMGPreconditioner, build_hierarchy
 
-__all__ = ["pcg", "ChebyshevSmoother", "GMGPreconditioner", "build_hierarchy"]
+__all__ = [
+    "pcg",
+    "bpcg",
+    "BPCGResult",
+    "BatchedGMGSolver",
+    "ChebyshevSmoother",
+    "GMGPreconditioner",
+    "build_hierarchy",
+]

@@ -49,28 +49,39 @@ def pcg(
     r = b - A(x)
     z = M(r)
     nom0 = _dot(z, r)
-    # MFEM: r0 = max(nom0 * rel_tol^2, abs_tol^2)
+    # MFEM: r0 = max(nom0 * rel_tol^2, abs_tol^2).  A zero RHS (or an x0
+    # that already solves the system) gives nom0 == 0 <= threshold, so the
+    # loop below never runs and the solve reports converged immediately.
     threshold = jnp.maximum(nom0 * rel_tol ** 2, abs_tol ** 2)
 
     def cond(state):
-        _, _, _, _, nom, k = state
-        return jnp.logical_and(nom > threshold, k < maxiter)
+        _, _, _, _, nom, k, stop = state
+        return (nom > threshold) & (k < maxiter) & ~stop
 
     def body(state):
-        x, r, _, d, nom, k = state
+        x, r, _, d, nom, k, _ = state
         ad = A(d)
         den = _dot(d, ad)
-        alpha = nom / den
+        # den <= 0 means a degenerate direction (non-SPD input, or an
+        # exactly-converged state): take no step and stop, mirroring
+        # MFEM's "PCG: The operator is not positive definite" break,
+        # instead of NaN-ing x or walking a negative curvature direction.
+        bad = den <= 0
+        alpha = jnp.where(bad, 0.0, nom / jnp.where(bad, 1.0, den))
         x = x + alpha * d
         r = r - alpha * ad
         z = M(r)
         betanom = _dot(z, r)
-        beta = betanom / nom
-        d = z + beta * d
-        return (x, r, z, d, betanom, k + 1)
+        beta = betanom / jnp.where(nom == 0, 1.0, nom)
+        d = jnp.where(bad, d, z + beta * d)
+        k = k + jnp.where(bad, 0, 1).astype(jnp.int32)
+        return (x, r, z, d, betanom, k, bad)
 
-    state = (x, r, z, z, nom0, jnp.asarray(0, dtype=jnp.int32))
-    x, r, z, d, nom, k = jax.lax.while_loop(cond, body, state)
+    state = (
+        x, r, z, z, nom0, jnp.asarray(0, dtype=jnp.int32),
+        jnp.asarray(False),
+    )
+    x, r, z, d, nom, k, _ = jax.lax.while_loop(cond, body, state)
     return PCGResult(
         x=x,
         iterations=k,

@@ -7,6 +7,12 @@ at setup; the polynomial acts on the interval
 [eig_lo_frac * hi, eig_hi_frac * lambda_max] (0.3 / 1.1 — the customary
 matrix-free multigrid choice).  Degree k = 2 by default, one pre- and one
 post-smoothing per V(1,1) cycle.
+
+Scenario batching: with ``batch_dims=1`` the operator, diagonal and
+vectors carry a leading scenario axis (S, ...) and lambda_max is
+estimated per scenario; the Chebyshev recurrence coefficients become
+(S,)-shaped and broadcast over each scenario's vector block, so one
+smoother application advances every scenario in lockstep.
 """
 
 from __future__ import annotations
@@ -20,25 +26,49 @@ import jax.numpy as jnp
 __all__ = ["ChebyshevSmoother", "power_iteration_lmax"]
 
 
-def power_iteration_lmax(A: Callable, dinv, shape, dtype, iters: int = 10):
-    """Estimate lambda_max(D^{-1} A) with deterministic power iterations."""
+def _expand(a, ndim: int):
+    """Right-pad ``a`` with singleton axes so it broadcasts against an
+    ndim-dimensional vector block ((S,) coefficients vs (S, n, 3))."""
+    a = jnp.asarray(a)
+    return a.reshape(a.shape + (1,) * (ndim - a.ndim))
+
+
+def power_iteration_lmax(
+    A: Callable, dinv, shape, dtype, iters: int = 10, batch_dims: int = 0
+):
+    """Estimate lambda_max(D^{-1} A) with deterministic power iterations.
+
+    With ``batch_dims=1`` the leading axis of ``shape`` is a scenario
+    batch: normalization and the Rayleigh quotient are taken per scenario
+    and the estimate has shape ``shape[:batch_dims]``.  The start vector
+    is drawn at the per-scenario shape and broadcast, so each batched row
+    runs exactly the iteration its scalar counterpart would.
+    """
     key = jax.random.PRNGKey(1234)
-    v = jax.random.normal(key, shape, dtype=dtype)
+    v = jax.random.normal(key, shape[batch_dims:], dtype=dtype)
+    v = jnp.broadcast_to(v, shape)
+    axes = tuple(range(batch_dims, v.ndim))
 
     def body(_, carry):
         v, lam = carry
-        v = v / jnp.linalg.norm(v.reshape(-1))
+        nrm = jnp.sqrt(jnp.sum(v * v, axis=axes))
+        v = v / _expand(nrm, v.ndim)
         w = dinv * A(v)
-        lam = jnp.vdot(v.reshape(-1), w.reshape(-1))
+        lam = jnp.sum(v * w, axis=axes)
         return (w, lam)
 
-    v, lam = jax.lax.fori_loop(0, iters, body, (v, jnp.asarray(0.0, dtype)))
+    lam0 = jnp.zeros(shape[:batch_dims], dtype)
+    v, lam = jax.lax.fori_loop(0, iters, body, (v, lam0))
     return jnp.abs(lam)
 
 
 @dataclasses.dataclass
 class ChebyshevSmoother:
-    """x <- x + p_k(D^{-1} A) D^{-1} (b - A x), Chebyshev on [lo, hi]."""
+    """x <- x + p_k(D^{-1} A) D^{-1} (b - A x), Chebyshev on [lo, hi].
+
+    ``lmax`` is a scalar for a single scenario or (S,) for a scenario
+    batch (matching a (S, n, 3) vector block).
+    """
 
     A: Callable
     dinv: Any
@@ -48,14 +78,17 @@ class ChebyshevSmoother:
     eig_hi_frac: float = 1.1
 
     @classmethod
-    def setup(cls, A, diagonal, shape, dtype, degree=2, power_iters=10):
+    def setup(cls, A, diagonal, shape, dtype, degree=2, power_iters=10,
+              batch_dims=0):
         dinv = 1.0 / diagonal
-        lmax = power_iteration_lmax(A, dinv, shape, dtype, power_iters)
+        lmax = power_iteration_lmax(
+            A, dinv, shape, dtype, power_iters, batch_dims=batch_dims
+        )
         return cls(A=A, dinv=dinv, lmax=lmax, degree=degree)
 
     def __call__(self, b, x=None):
         """Apply ``degree`` Chebyshev-Jacobi steps to A x = b."""
-        hi = self.eig_hi_frac * self.lmax
+        hi = self.eig_hi_frac * jnp.asarray(self.lmax)
         lo = self.eig_lo_frac * hi
         theta = 0.5 * (hi + lo)
         delta = 0.5 * (hi - lo)
@@ -67,13 +100,15 @@ class ChebyshevSmoother:
         else:
             r = b - self.A(x)
         z = self.dinv * r
-        d = z / theta
+        d = z / _expand(theta, b.ndim)
         rho = 1.0 / sigma
         for _ in range(self.degree):
             x = x + d
             r = r - self.A(d)
             z = self.dinv * r
             rho_new = 1.0 / (2.0 * sigma - rho)
-            d = rho_new * rho * d + (2.0 * rho_new / delta) * z
+            d = _expand(rho_new * rho, b.ndim) * d + (
+                2.0 * _expand(rho_new, b.ndim) / _expand(delta, b.ndim)
+            ) * z
             rho = rho_new
         return x

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 from typing import Callable
 
+import jax
 import jax.numpy as jnp
 import jax.scipy.linalg as jsl
 import numpy as np
@@ -27,7 +28,36 @@ from repro.core.fa import SparseMatrix, assemble_sparse
 from repro.core.operators import ElasticityOperator
 from repro.solvers.cg import pcg
 
-__all__ = ["make_coarse_solver"]
+__all__ = ["make_coarse_solver", "make_batched_coarse_solver"]
+
+
+def make_batched_coarse_solver(cop, nscalar: int, nbatch: int, dtype) -> Callable:
+    """Dense Cholesky coarse solve for a scenario-batched constrained
+    operator, built by probing the operator with identity columns.
+
+    Unlike the scipy assembly below this is pure jax (vmap + batched
+    cholesky), so it traces: a jitted batched solve can take per-scenario
+    materials as runtime arguments and still factor its coarse level
+    inside the same device program.  The coarsest level is small by
+    construction (paper Sec. 3.2), so the n probing applications are
+    cheap relative to one fine-level operator action.
+    """
+    n = nscalar * 3
+
+    def col(e):
+        xb = jnp.broadcast_to(e.reshape(nscalar, 3), (nbatch, nscalar, 3))
+        return cop(xb).reshape(nbatch, n)
+
+    cols = jax.vmap(col)(jnp.eye(n, dtype=dtype))  # (n_j, S, n_i)
+    K = jnp.moveaxis(cols, 0, -1)  # (S, i, j)
+    L = jnp.linalg.cholesky(K)
+
+    def solve(b):
+        flat = b.reshape(nbatch, n)
+        x = jax.vmap(lambda Ls, bs: jsl.cho_solve((Ls, True), bs))(L, flat)
+        return x.reshape(b.shape)
+
+    return solve
 
 
 def make_coarse_solver(
@@ -38,17 +68,37 @@ def make_coarse_solver(
 ) -> Callable:
     """Return solve(b) -> x for the constrained coarsest-level system."""
     space = op.space
+    if op.nbatch is not None:
+        # Scenario batch: per-scenario materials need per-scenario factors.
+        if method != "cholesky":
+            raise NotImplementedError(
+                f"batched coarse solve supports only 'cholesky', got {method!r}"
+            )
+        return make_batched_coarse_solver(
+            op.constrained(), space.nscalar, op.nbatch, op.dtype
+        )
     ess = np.asarray(op.ess_mask)
 
     if method == "cholesky":
-        qd_materials = op.materials
-        from repro.core.geometry import make_quadrature_data
+        if isinstance(op.materials, dict):
+            qd_materials = op.materials
+            from repro.core.geometry import make_quadrature_data
 
-        qd = make_quadrature_data(space.mesh, space.tables, qd_materials)
-        sm: SparseMatrix = assemble_sparse(
-            space, qd, qd_materials, ess_mask=ess, dtype=op.dtype
-        )
-        dense = np.asarray(sm.csr.todense())
+            qd = make_quadrature_data(space.mesh, space.tables, qd_materials)
+            sm: SparseMatrix = assemble_sparse(
+                space, qd, qd_materials, ess_mask=ess, dtype=op.dtype
+            )
+            dense = np.asarray(sm.csr.todense())
+        else:
+            # Per-element (lam_e, mu_e) fields have no attribute dict for
+            # the scipy assembly; probe the constrained operator with
+            # identity columns instead (the coarse level is small).
+            cop = op.constrained()
+            n = space.nscalar * 3
+            cols = jax.vmap(
+                lambda e: cop(e.reshape(space.nscalar, 3)).reshape(n)
+            )(jnp.eye(n, dtype=op.dtype))
+            dense = np.asarray(cols).T
         cho = sla.cho_factor(dense)
         c_jnp = jnp.asarray(cho[0], dtype=op.dtype)
         lower = cho[1]

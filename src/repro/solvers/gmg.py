@@ -10,6 +10,12 @@ level is assembled and solved per :mod:`repro.solvers.coarse`.
 
 FA+GMG, PA+GMG and PAop+GMG differ only in the operator handle used on
 fine/intermediate levels — exactly the paper's experimental contract.
+
+Scenario batching: passing ``materials`` as a *sequence* of
+attribute->(lambda, mu) dicts builds one hierarchy whose operators,
+smoothers, transfers and coarse solve all carry a leading scenario axis
+(S, nscalar, 3); the V-cycle below is shape-agnostic and preconditions
+all scenarios in one pass (consumed by repro.solvers.batched.bpcg).
 """
 
 from __future__ import annotations
@@ -28,7 +34,13 @@ from repro.fem.transfer import Transfer, make_transfer
 from repro.solvers.chebyshev import ChebyshevSmoother
 from repro.solvers.coarse import make_coarse_solver
 
-__all__ = ["p_chain", "build_hierarchy", "GMGPreconditioner", "Level"]
+__all__ = [
+    "p_chain",
+    "hierarchy_spaces",
+    "build_hierarchy",
+    "GMGPreconditioner",
+    "Level",
+]
 
 
 def p_chain(p_target: int) -> list[int]:
@@ -39,6 +51,20 @@ def p_chain(p_target: int) -> list[int]:
     if chain[-1] != p_target:
         chain.append(p_target)
     return chain
+
+
+def hierarchy_spaces(
+    coarse_mesh: HexMesh, n_h_refine: int, p_target: int
+) -> list[H1Space]:
+    """The GMG level ladder, coarse -> fine: ``n_h_refine`` uniform
+    h-refinements at p = 1, then p-doubling on the finest mesh."""
+    meshes = [coarse_mesh]
+    for _ in range(n_h_refine):
+        meshes.append(meshes[-1].refined())
+    spaces = [H1Space(m, 1) for m in meshes]
+    for p in p_chain(p_target)[1:]:
+        spaces.append(H1Space(meshes[-1], p))
+    return spaces
 
 
 @dataclasses.dataclass
@@ -92,13 +118,7 @@ def build_hierarchy(
     pallas_interpret: bool = True,
 ) -> GMGPreconditioner:
     """Build the paper's GMG preconditioner for the beam benchmark."""
-    # --- level spaces: h-levels at p=1, then p-doubling on the finest mesh.
-    meshes = [coarse_mesh]
-    for _ in range(n_h_refine):
-        meshes.append(meshes[-1].refined())
-    spaces = [H1Space(m, 1) for m in meshes]
-    for p in p_chain(p_target)[1:]:
-        spaces.append(H1Space(meshes[-1], p))
+    spaces = hierarchy_spaces(coarse_mesh, n_h_refine, p_target)
 
     levels: list[Level] = []
     for i, sp in enumerate(spaces):
@@ -119,13 +139,17 @@ def build_hierarchy(
         smoother = None
         if not is_coarsest:
             diag = cop.diagonal()
+            shape = (sp.nscalar, 3)
+            if op.nbatch is not None:
+                shape = (op.nbatch,) + shape
             smoother = ChebyshevSmoother.setup(
                 cop,
                 diag,
-                shape=(sp.nscalar, 3),
+                shape=shape,
                 dtype=dtype,
                 degree=cheb_degree,
                 power_iters=power_iters,
+                batch_dims=1 if op.nbatch is not None else 0,
             )
         levels.append(
             Level(

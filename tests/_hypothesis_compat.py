@@ -1,0 +1,43 @@
+"""Optional-hypothesis shim.
+
+``tests/test_basis.py`` (and three siblings) used to hard-import
+hypothesis, so a container without it aborted the WHOLE tier-1 suite at
+collection.  Importing ``given``/``settings``/``st`` from here instead
+keeps every deterministic test runnable: when hypothesis is installed
+the real objects are re-exported; when it is missing, ``@given(...)``
+degrades to ``pytest.mark.skip`` on just the property-based tests
+(the moral equivalent of ``pytest.importorskip("hypothesis")`` scoped
+per-test instead of per-module).
+
+Install the real thing with ``pip install -r requirements-dev.txt``.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for ``hypothesis.strategies`` so module-level
+        ``st.integers(...)``-style decorator arguments still evaluate."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(*args, **kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")

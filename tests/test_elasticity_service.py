@@ -1,0 +1,123 @@
+"""ElasticityService tests: mixed-discretization queue routing, LRU
+cache behavior on repeated keys, generational padding, and agreement of
+batched solutions with the sequential solve_beam driver."""
+
+import numpy as np
+import pytest
+
+from repro.launch.solve import solve_beam
+from repro.serve.elasticity_service import (
+    ElasticityService,
+    SolveRequest,
+)
+
+MATS_A = {1: (50.0, 50.0), 2: (1.0, 1.0)}  # the paper's beam materials
+MATS_B = {1: (80.0, 60.0), 2: (2.0, 1.0)}
+
+
+@pytest.fixture(scope="module")
+def service():
+    return ElasticityService(max_batch=8, cache_size=4)
+
+
+@pytest.fixture(scope="module")
+def mixed_batch_reports(service):
+    """One mixed batch of 8 scenarios (2 material sets x 2 tractions x 2
+    tolerances) solved in a single batched program."""
+    requests = [
+        SolveRequest(
+            p=2,
+            refine=1,
+            materials=MATS_A if i % 2 == 0 else MATS_B,
+            traction=(0.0, 0.0, -1e-2) if i < 4 else (0.0, 5e-3, -5e-3),
+            rel_tol=1e-10 if i % 4 < 2 else 1e-8,
+            keep_solution=True,
+        )
+        for i in range(8)
+    ]
+    return requests, service.solve(requests)
+
+
+def test_mixed_batch_converges_with_per_request_iterations(mixed_batch_reports):
+    requests, reports = mixed_batch_reports
+    assert len(reports) == 8
+    assert all(r.converged for r in reports)
+    assert all(r.final_rel_norm <= r.request.rel_tol for r in reports)
+    assert all(r.batch_size == 8 and r.generation == 0 for r in reports)
+    iters = [r.iterations for r in reports]
+    assert all(it > 0 for it in iters)
+    # different tolerances within the batch -> different retire points
+    assert len(set(iters)) >= 2
+
+
+def test_mixed_batch_matches_sequential_solve_beam(mixed_batch_reports):
+    """Each batched solution must match the one-scenario-at-a-time
+    driver to <= 1e-8 relative error (acceptance criterion)."""
+    requests, reports = mixed_batch_reports
+    # Scenario 0 uses the paper's exact benchmark setup.
+    rep_seq = solve_beam(2, 1, assembly="paop", rel_tol=1e-10,
+                         keep_solution=True)
+    x_seq = np.asarray(rep_seq.x)
+    x_b = reports[0].x
+    rel = np.linalg.norm(x_b - x_seq) / np.linalg.norm(x_seq)
+    assert rel <= 1e-8
+    assert reports[0].iterations == rep_seq.iterations
+
+
+def test_second_same_key_batch_hits_cache(service, mixed_batch_reports):
+    """Repeating a discretization key must skip hierarchy build and
+    recompilation: cache_hit=True and ~zero setup time."""
+    requests, first = mixed_batch_reports
+    assert not first[0].cache_hit
+    assert first[0].t_setup > 0
+    again = service.solve(
+        [SolveRequest(p=2, refine=1, materials=MATS_B, rel_tol=1e-8)]
+    )
+    assert again[0].cache_hit
+    assert again[0].t_setup == 0.0
+    assert again[0].converged
+    assert service.stats["cache_hits"] >= 1
+
+
+def test_partial_generation_padding(service, mixed_batch_reports):
+    """3 requests with max_batch=8: the generation is padded with
+    zero-traction rows, which must not affect the real solutions."""
+    reqs = [
+        SolveRequest(p=2, refine=1, materials=MATS_A, rel_tol=1e-8,
+                     traction=(0.0, 0.0, -1e-2 * (i + 1)))
+        for i in range(3)
+    ]
+    reports = service.solve(reqs)
+    assert len(reports) == 3
+    assert all(r.converged for r in reports)
+    assert all(r.batch_size == 3 for r in reports)
+
+
+def test_mixed_discretization_queue():
+    """Requests with different (p, refine) keys are grouped and solved
+    per key; reports come back in submission order."""
+    service = ElasticityService(max_batch=4, cache_size=4)
+    reqs = [
+        SolveRequest(p=1, refine=1, materials=MATS_A, rel_tol=1e-8),
+        SolveRequest(p=1, refine=0, materials=MATS_A, rel_tol=1e-8),
+        SolveRequest(p=1, refine=1, materials=MATS_B, rel_tol=1e-8),
+        SolveRequest(p=1, refine=0, materials=MATS_B, rel_tol=1e-8),
+    ]
+    reports = service.solve(reqs)
+    assert [r.key[:2] for r in reports] == [(1, 1), (1, 0), (1, 1), (1, 0)]
+    assert all(r.converged for r in reports)
+    assert service.stats["cache_misses"] == 2
+    # each key solved its two members in one generation
+    assert service.stats["generations"] == 2
+    assert {r.batch_size for r in reports} == {2}
+
+
+def test_lru_eviction():
+    """cache_size=1: a second key evicts the first; re-solving the first
+    key is a miss again."""
+    service = ElasticityService(max_batch=2, cache_size=1)
+    service.solve([SolveRequest(p=1, refine=0, rel_tol=1e-6)])
+    service.solve([SolveRequest(p=1, refine=1, rel_tol=1e-6)])
+    rep = service.solve([SolveRequest(p=1, refine=0, rel_tol=1e-6)])[0]
+    assert not rep.cache_hit
+    assert service.stats["cache_misses"] == 3

@@ -60,6 +60,46 @@ def test_padding_path():
                                atol=1e-5 * float(jnp.abs(ref).max()))
 
 
+def test_clamp_never_exceeds_element_count():
+    """The clamp must bound the block by ne (padding < 2x), fixing the
+    old ``eb=128, ne=12 -> pad to 128`` >10x blow-up."""
+    for ne in (1, 2, 3, 5, 7, 12, 100, 129):
+        for eb in (1, 2, 8, 128, 1024):
+            got = ops.clamp_elements_per_block(eb, ne)
+            assert 1 <= got <= ne, (eb, ne, got)
+            assert got <= eb or eb > ne, (eb, ne, got)
+            padded = ne + (-ne) % got
+            assert padded < 2 * ne or got == 1, (eb, ne, got, padded)
+
+
+def test_clamp_prefers_exact_divisors():
+    """When a divisor of ne at least half the block exists, it is chosen
+    (zero padding beats a slightly larger block)."""
+    assert ops.clamp_elements_per_block(128, 12) == 12
+    assert ops.clamp_elements_per_block(8, 12) == 6
+    assert ops.clamp_elements_per_block(4, 12) == 4
+    assert ops.clamp_elements_per_block(8, 64) == 8
+    # prime ne with no useful divisor: keep the clamped block, pad < 2x
+    assert ops.clamp_elements_per_block(4, 7) == 4
+
+
+@pytest.mark.parametrize("ne", [1, 3, 12, 64])
+def test_elements_per_block_bounded_by_ne(ne):
+    for p in (1, 2, 4, 8):
+        eb = ops.elements_per_block(p, ne)
+        assert 1 <= eb <= ne
+
+
+def test_small_mesh_padding_roundtrip():
+    """The regression shape from the issue (small ne, auto eb): result
+    must round-trip through pad/trim and match the oracle."""
+    x, lam, mu, jinv, B, G = _setup(2, 12, jnp.float32)
+    y = ops.pa_elasticity(x, lam, mu, jinv, B, G, interpret=True)
+    ref = paop_ref(x, lam, mu, jinv, B, G)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=2e-4,
+                               atol=1e-5 * float(jnp.abs(ref).max()))
+
+
 def test_vmem_budget_respected():
     for p in (1, 2, 4, 8):
         eb = ops.elements_per_block(p, ne=1 << 20)

@@ -36,6 +36,34 @@ def test_pcg_matches_dense_solve():
     np.testing.assert_allclose(np.asarray(res.x), x_ref, rtol=1e-8)
 
 
+def test_pcg_zero_rhs_converges_immediately():
+    """b == 0 (nom0 == 0) must exit with x = 0, converged, 0 iterations,
+    and no NaNs — also the contract padded batch rows rely on."""
+    b = jnp.zeros((7, 3))
+    res = pcg(lambda x: 2.0 * x, b, rel_tol=1e-8)
+    assert int(res.iterations) == 0
+    assert bool(res.converged)
+    np.testing.assert_array_equal(np.asarray(res.x), 0.0)
+    assert not np.isnan(np.asarray(res.x)).any()
+    assert float(res.final_norm) == 0.0
+    # identical semantics under jit
+    res_j = jax.jit(lambda bv: pcg(lambda x: 2.0 * x, bv, rel_tol=1e-8))(b)
+    assert bool(res_j.converged)
+    assert not np.isnan(np.asarray(res_j.x)).any()
+
+
+def test_pcg_x0_already_solved():
+    """An x0 that already solves the system is another nom0 == 0 path."""
+    rng = np.random.default_rng(7)
+    m = rng.standard_normal((12, 12))
+    a = jnp.asarray(m @ m.T + 12 * np.eye(12))
+    x_true = jnp.asarray(rng.standard_normal(12))
+    res = pcg(lambda x: a @ x, a @ x_true, x0=x_true, rel_tol=1e-8)
+    assert int(res.iterations) == 0
+    assert bool(res.converged)
+    np.testing.assert_allclose(np.asarray(res.x), np.asarray(x_true))
+
+
 @pytest.mark.parametrize("p", [1, 2, 4])
 def test_gmg_pcg_converges(p):
     rep = solve_beam(p, n_h_refine=1, assembly="paop", rel_tol=1e-6)

@@ -98,9 +98,10 @@ def test_local_cell_lowering():
     dry run."""
     from repro.launch.cells import build_cell
 
+    from repro.launch.mesh import axis_type_kwargs
+
     mesh = jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        (1, 1), ("data", "model"), **axis_type_kwargs(2)
     )
     import repro.configs.base as base
 
