@@ -8,7 +8,15 @@ serving regime).  The sequential baseline is solve_beam called once per
 scenario — it re-builds the hierarchy and re-traces every call, exactly
 what the service amortizes.
 
+``--continuous`` instead compares the two scheduling policies on a
+mixed-tolerance workload (alternating loose/tight rel_tol): generational
+batching is gated by the slowest row of every generation, while
+continuous batching retires loose rows early, refills their slots from
+the queue, and lets the draining tail shrink to smaller padding buckets.
+Reports throughput and per-request tail latency for both.
+
     PYTHONPATH=src python -m benchmarks.batched_throughput [--quick]
+    PYTHONPATH=src python -m benchmarks.batched_throughput --continuous
 """
 
 from __future__ import annotations
@@ -92,6 +100,106 @@ def bench_sequential(n: int) -> dict:
     }
 
 
+def make_mixed_tol_requests(
+    n: int, loose: float = 1e-4, tight: float = 1e-10
+) -> list[SolveRequest]:
+    """Mixed-tolerance workload: one tight-tolerance request per four
+    loose ones, with varied materials and tractions — the serving regime
+    where a minority of slow scenarios gates every generation while the
+    loose majority could have streamed through the freed slots."""
+    return [
+        SolveRequest(
+            p=P,
+            refine=REFINE,
+            materials={
+                1: (50.0 + 5 * (i % 3), 50.0),
+                2: (1.0 + 0.5 * (i % 2), 1.0),
+            },
+            traction=(0.0, 2e-3 * (i % 2), -1e-2 * (1 + 0.1 * (i % 4))),
+            rel_tol=tight if i % 4 == 0 else loose,
+        )
+        for i in range(n)
+    ]
+
+
+def _latency_percentiles(latencies: list[float]) -> tuple[float, float]:
+    return (
+        float(np.percentile(latencies, 50)),
+        float(np.percentile(latencies, 95)),
+    )
+
+
+def _time_generational(service: ElasticityService, n: int):
+    reqs = make_mixed_tol_requests(n)
+    t0 = time.perf_counter()
+    reports = service.solve(reqs)
+    dt = time.perf_counter() - t0
+    assert all(r.converged for r in reports)
+    assert all(r.final_rel_norm <= r.request.rel_tol for r in reports)
+    # A request is done when its generation retires; its latency is the
+    # cumulative time of all generations up to and including its own
+    # (generations of one key run back-to-back).
+    gen_t = {r.generation: r.t_solve for r in reports}
+    cum = np.cumsum([gen_t[g] for g in sorted(gen_t)])
+    return dt, [float(cum[r.generation]) for r in reports]
+
+
+def _time_continuous(service: ElasticityService, n: int):
+    reqs = make_mixed_tol_requests(n)
+    t0 = time.perf_counter()
+    reports = service.solve_continuous(reqs)
+    dt = time.perf_counter() - t0
+    assert all(r.converged for r in reports)
+    assert all(r.final_rel_norm <= r.request.rel_tol for r in reports)
+    return dt, [r.t_solve for r in reports]  # admission -> retirement
+
+
+def run_continuous(
+    batch: int = 16,
+    n_requests: int | None = None,
+    repeats: int = 3,
+    chunk_iters: int = 8,
+) -> list[dict]:
+    """Continuous vs generational on the mixed-tolerance workload.
+
+    The repeats of the two policies are interleaved in time and each
+    policy reports its best repeat: on a shared/throttled CPU a transient
+    co-tenant spike would otherwise land on one policy's block and
+    dominate the ratio."""
+    n = 2 * batch if n_requests is None else n_requests
+    svc_gen = ElasticityService(max_batch=batch)
+    svc_cont = ElasticityService(max_batch=batch, chunk_iters=chunk_iters)
+    # Warm: hierarchy build + one compile per (bucket, reset-flag) the
+    # workload visits (16, 8, ... as the continuous tail drains).
+    svc_gen.solve(make_mixed_tol_requests(n))
+    svc_cont.solve_continuous(make_mixed_tol_requests(n))
+    runs_gen, runs_cont = [], []
+    for _ in range(repeats):
+        runs_gen.append(_time_generational(svc_gen, n))
+        runs_cont.append(_time_continuous(svc_cont, n))
+    rows = []
+    for policy, runs in (
+        ("generational", runs_gen),
+        (f"continuous(k={chunk_iters})", runs_cont),
+    ):
+        # throughput AND latencies from the same (best) repeat
+        t, lat = min(runs, key=lambda r: r[0])
+        p50, p95 = _latency_percentiles(lat)
+        rows.append(
+            {
+                "policy": policy,
+                "scenarios_per_s": n / t,
+                "t_workload_s": t,
+                "latency_p50_s": p50,
+                "latency_p95_s": p95,
+            }
+        )
+    rows[1]["speedup_vs_generational"] = (
+        rows[1]["scenarios_per_s"] / rows[0]["scenarios_per_s"]
+    )
+    return rows
+
+
 def run(fast: bool = False, quick: bool = False) -> list[dict]:
     batches = [1, 4] if quick else ([1, 4, 16] if fast else [1, 4, 16, 64])
     n_seq = 2 if quick else 4
@@ -110,7 +218,43 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: batches {1, 4}, single repeat")
     ap.add_argument("--fast", action="store_true", help="skip batch 64")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous vs generational batching on a "
+                         "mixed-tolerance workload")
+    ap.add_argument("--batch", type=int, default=16,
+                    help="max_batch for --continuous (default 16)")
+    ap.add_argument("--n-requests", type=int, default=None,
+                    help="workload size for --continuous (default 2*batch)")
+    ap.add_argument("--chunk-iters", type=int, default=8,
+                    help="PCG iterations per continuous chunk")
+    ap.add_argument("--repeats", type=int, default=3)
     args = ap.parse_args()
+    if args.continuous:
+        rows = run_continuous(
+            batch=args.batch,
+            n_requests=args.n_requests,
+            repeats=args.repeats,
+            chunk_iters=args.chunk_iters,
+        )
+        print(
+            fmt_table(
+                rows,
+                [
+                    "policy",
+                    "scenarios_per_s",
+                    "t_workload_s",
+                    "latency_p50_s",
+                    "latency_p95_s",
+                    "speedup_vs_generational",
+                ],
+                title=(
+                    f"Continuous vs generational batching "
+                    f"(mixed tolerances, batch={args.batch}, p={P}, "
+                    f"refine={REFINE}, CPU)"
+                ),
+            )
+        )
+        return
     rows = run(fast=args.fast, quick=args.quick)
     print(
         fmt_table(

@@ -5,7 +5,9 @@ sets, two tractions, two tolerances) to the ElasticityService, which
 solves all of them in ONE compiled batched GMG-PCG program, then
 re-submits the same key to show the hierarchy/program cache making the
 second round's setup free.  One scenario is cross-checked against the
-sequential solve_beam driver.
+sequential solve_beam driver.  A final round drives the *continuous*
+engine: requests are submitted while earlier ones are mid-flight,
+converged rows retire immediately and their slots are refilled.
 
     PYTHONPATH=src python examples/elasticity_service.py
 """
@@ -64,6 +66,22 @@ def main():
     rel = np.linalg.norm(x_b - x_s) / np.linalg.norm(x_s)
     print(f"scenario 0 vs sequential solve_beam: rel err {rel:.2e}")
     assert rel < 1e-6
+
+    # Continuous batching: non-blocking submit/step/drain.  The first
+    # half of the workload is admitted, iterated in bounded chunks, and
+    # as loose-tolerance rows converge their slots are refilled by the
+    # requests submitted mid-flight — no generation boundary.
+    print("round 3 (continuous): mid-flight submission + slot refill")
+    tickets = [service.submit(r) for r in requests[:4]]
+    service.step()  # first chunk is already running
+    tickets += [service.submit(r) for r in requests[4:]]  # arrive mid-flight
+    service.run_until_idle()
+    reports3 = service.drain()
+    assert len(reports3) == len(tickets)
+    for i, r in enumerate(reports3):
+        print(f"  req {i}: iters={r.iterations:3d} converged={r.converged} "
+              f"retired_at_chunk={r.generation} t={r.t_solve:.2f}s")
+    print(f"service stats: {service.stats}")
 
 
 if __name__ == "__main__":

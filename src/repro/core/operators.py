@@ -174,6 +174,61 @@ class ElasticityOperator:
         new._bind_materials(lam_e, mu_e)
         return new
 
+    def with_material_weights(
+        self, lam_w, mu_w, nbatch: int | None
+    ) -> "ElasticityOperator":
+        """A shallow copy binding precomputed weighted fields
+        (``lam_e * w_detj``) directly, skipping the quadrature-weight
+        multiply.  The resumable batched solve keeps these per-scenario
+        fields alive across chunk boundaries (in its prep pytree) and
+        rebinds them on every chunk; for a scenario batch ``lam_w`` is
+        the folded ``(S * nelem, Q, Q, Q)`` array and ``nbatch`` is S."""
+        if self.assembly == "fa":
+            raise ValueError("with_material_weights is matrix-free only")
+        new = copy.copy(self)
+        new.materials = None
+        new.nbatch = nbatch
+        new.lam_w = lam_w
+        new.mu_w = mu_w
+        return new
+
+    def with_materials_rows(self, lam_e, mu_e, row_mask) -> "ElasticityOperator":
+        """In-place per-scenario-row field update (functional): rows of the
+        batched material fields selected by ``row_mask`` (S,) take freshly
+        weighted fields from the ``(S, nelem)`` candidates; unselected rows
+        keep this operator's current fields *bitwise* — refilling a batch
+        slot must not perturb the scenarios still in flight.  Traceable."""
+        if self.assembly == "fa":
+            raise ValueError("with_materials_rows is matrix-free only")
+        if self.nbatch is None:
+            raise ValueError(
+                "with_materials_rows requires a scenario-batched operator"
+            )
+        s, ne = self.nbatch, self.space.nelem
+        lam_e = jnp.asarray(lam_e, dtype=self.dtype)
+        mu_e = jnp.asarray(mu_e, dtype=self.dtype)
+        if lam_e.shape != (s, ne) or mu_e.shape != (s, ne):
+            raise ValueError(
+                f"candidate fields {lam_e.shape}/{mu_e.shape} must be "
+                f"({s}, {ne})"
+            )
+        mask = jnp.asarray(row_mask).reshape((s,) + (1,) * 4)
+
+        def merge(old_w, cand_e):
+            cand_w = cand_e.reshape(-1)[:, None, None, None] * self.w_detj
+            tail = old_w.shape[1:]
+            return jnp.where(
+                mask,
+                cand_w.reshape((s, ne) + tail),
+                old_w.reshape((s, ne) + tail),
+            ).reshape((s * ne,) + tail)
+
+        new = copy.copy(self)
+        new.materials = None
+        new.lam_w = merge(self.lam_w, lam_e)
+        new.mu_w = merge(self.mu_w, mu_e)
+        return new
+
     # -- raw action ---------------------------------------------------------
     def _apply_evec(self, x_e):
         if self.lam_w is None:

@@ -9,6 +9,7 @@ Usage:
     PYTHONPATH=src python -m repro.launch.serve_solve \
         --n-requests 16 --max-batch 8 --p 2 --refine 1
     PYTHONPATH=src python -m repro.launch.serve_solve --p 1 2  # mixed keys
+    PYTHONPATH=src python -m repro.launch.serve_solve --continuous
 """
 
 from __future__ import annotations
@@ -59,17 +60,26 @@ def main() -> None:
     ap.add_argument("--assembly", default="paop")
     ap.add_argument("--repeat", type=int, default=1,
                     help="re-run the workload to demonstrate cache hits")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching (slot refill + bucketed "
+                         "padding) instead of generational")
+    ap.add_argument("--chunk-iters", type=int, default=8,
+                    help="PCG iterations per continuous chunk")
     args = ap.parse_args()
 
     service = ElasticityService(
-        max_batch=args.max_batch, assembly=args.assembly
+        max_batch=args.max_batch, assembly=args.assembly,
+        chunk_iters=args.chunk_iters,
     )
     for round_i in range(args.repeat):
         reqs = make_workload(
             args.n_requests, args.p, args.refine, args.rel_tol
         )
         t0 = time.perf_counter()
-        reports = service.solve(reqs)
+        if args.continuous:
+            reports = service.solve_continuous(reqs)
+        else:
+            reports = service.solve(reqs)
         dt = time.perf_counter() - t0
         print(
             f"-- round {round_i}: {len(reports)} scenarios in {dt:.2f}s "

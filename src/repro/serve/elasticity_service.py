@@ -3,20 +3,40 @@
 The solver-side sibling of :class:`repro.serve.engine.ServeEngine`:
 requests describing parameterized elasticity scenarios (materials,
 traction, tolerance) arrive in a queue, are grouped by *discretization
-key* ``(p, n_h_refine, coarse_mesh.shape)``, and each group is solved in
-generations of up to ``max_batch`` scenarios by ONE compiled batched
-GMG-PCG program (:class:`repro.solvers.batched.BatchedGMGSolver`):
+key* ``(p, n_h_refine, coarse_mesh.shape)``, and each group is solved by
+compiled batched GMG-PCG programs
+(:class:`repro.solvers.batched.BatchedGMGSolver`).  Two scheduling
+policies share the cache and report plumbing:
 
-* the geometric hierarchy + compiled solve per key live in an LRU cache,
-  so the second batch with the same key skips all setup (the paper's
-  "Prec." phase) and retracing entirely;
-* within a generation, scenarios that converge are retired by the bpcg
-  active mask while the rest keep iterating; between generations, slots
-  are refilled from the queue (generational continuous batching, exactly
-  the engine's prefill-boundary policy);
-* short generations are padded to ``max_batch`` with zero-traction rows
-  — born converged, 0 iterations — so one program shape serves every
-  generation of a key without recompiling;
+* **continuous batching** (``submit`` / ``step`` / ``drain``) — the
+  production path.  Each in-flight key holds a resumable
+  :class:`~repro.solvers.batched.BpcgState`; every ``step`` advances it
+  by a bounded chunk of PCG iterations, retires converged rows
+  immediately (their :class:`SolveReport`\\ s become drainable), refills
+  the freed slots from the queue by resetting *just those state rows*
+  (new materials folded into the operators' per-scenario fields in
+  place), and admits requests submitted mid-flight.  One slow scenario
+  no longer idles a whole generation — exactly the prefill-boundary
+  inefficiency continuous batching removes in LM serving engines.
+
+* **generational batching** (``solve``) — drain everything in
+  fixed batches; kept for one-shot workloads and as the baseline the
+  ``--continuous`` benchmark compares against.
+
+Shared machinery:
+
+* the geometric hierarchy + compiled programs per key live in an LRU
+  cache, so repeat traffic skips all setup (the paper's "Prec." phase)
+  and retracing entirely;
+* **bucketed padding**: batches are padded to the smallest sufficient
+  bucket (1/2/4/.../max_batch), not always to ``max_batch``, so one
+  compiled step program per ``(key, bucket)`` serves all nearby batch
+  sizes and a draining tail of tight-tolerance scenarios shrinks to a
+  cheaper program instead of dragging full-width padding along;
+* padding rows (zero traction — born converged, 0 iterations) are
+  internal: they are never surfaced to callers, and real zero-RHS
+  requests are flagged ``born_converged`` so they can't be mistaken
+  for a padded slot;
 * every request gets a per-request :class:`SolveReport` with its own
   iteration count, convergence flag and residual norm.
 """
@@ -34,7 +54,7 @@ import numpy as np
 
 from repro.core.geometry import MATERIALS_BEAM
 from repro.fem.mesh import HexMesh, beam_hex
-from repro.solvers.batched import BatchedGMGSolver
+from repro.solvers.batched import BatchedGMGSolver, BpcgState
 
 __all__ = ["SolveRequest", "SolveReport", "ElasticityService"]
 
@@ -54,7 +74,14 @@ class SolveRequest:
 
 @dataclasses.dataclass
 class SolveReport:
-    """Per-request outcome (one row of a batched generation)."""
+    """Per-request outcome (one row of a batched solve).
+
+    ``generation`` is the generation index for the generational path and
+    the retiring chunk index for the continuous path; ``batch_size`` is
+    the number of live (non-padding) rows sharing the program when this
+    request finished; ``t_solve`` is the generation's device time for
+    the generational path and the request's admission-to-retirement
+    latency for the continuous path."""
 
     request: SolveRequest
     key: tuple
@@ -62,16 +89,59 @@ class SolveReport:
     converged: bool
     final_rel_norm: float
     ndof: int
-    batch_size: int  # scenarios in this generation (excl. padding)
-    generation: int  # generation index within its group
+    batch_size: int  # live scenarios in this batch (excl. padding)
+    generation: int  # generation index / retiring chunk index
     cache_hit: bool  # hierarchy + compiled solve came from the LRU cache
     t_setup: float  # seconds building the solver program (0 on cache hit)
-    t_solve: float  # seconds for this request's generation, shared
+    t_solve: float  # see class docstring
+    born_converged: bool = False  # zero RHS: converged before iteration 1
     x: Any = None
 
 
+@dataclasses.dataclass
+class _Slot:
+    """A live batch row: which request occupies it and since when."""
+
+    ticket: int
+    request: SolveRequest
+    t_admit: float
+
+
+class _Flight:
+    """In-flight continuous batch for one discretization key: the
+    resumable solver state plus host-side slot bookkeeping."""
+
+    def __init__(self, key, solver, cache_hit, t_setup):
+        self.key = key
+        self.solver = solver
+        self.cache_hit = cache_hit
+        self.t_setup = t_setup
+        self.bucket = 0
+        self.slots: list[_Slot | None] = []
+        n_attr = len(solver.attr_values)
+        self.lam = np.zeros((0, n_attr))
+        self.mu = np.zeros((0, n_attr))
+        self.tr = np.zeros((0, 3))
+        self.tol = np.zeros((0,))
+        self.state: BpcgState | None = None
+        self.prep: dict | None = None
+        # Materials each prep row was computed for (prep_valid rows
+        # only).  Kept separately from lam/mu — a retiring row's prep
+        # stays valid for its OLD materials until overwritten, so it can
+        # donate its derived data to a refill with a matching config.
+        self.prep_valid = np.zeros((0,), dtype=bool)
+        self.prep_lam = np.zeros((0, n_attr))
+        self.prep_mu = np.zeros((0, n_attr))
+        self.pending_reset: np.ndarray | None = None
+        self.chunks = 0
+
+    def live_rows(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s is not None]
+
+
 class ElasticityService:
-    """Queue + LRU-cached compiled solvers + generational batching."""
+    """Queue + LRU-cached compiled solvers + continuous/generational
+    batching."""
 
     def __init__(
         self,
@@ -82,20 +152,36 @@ class ElasticityService:
         dtype=jnp.float64,
         maxiter: int = 200,
         pallas_interpret: bool = True,
+        chunk_iters: int = 8,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if cache_size < 1:
             raise ValueError(f"cache_size must be >= 1, got {cache_size}")
+        if chunk_iters < 1:
+            raise ValueError(f"chunk_iters must be >= 1, got {chunk_iters}")
         self.max_batch = max_batch
         self.cache_size = cache_size
         self.assembly = assembly
         self.dtype = dtype
         self.maxiter = maxiter
         self.pallas_interpret = pallas_interpret
+        self.chunk_iters = chunk_iters
         self._solvers: OrderedDict[tuple, BatchedGMGSolver] = OrderedDict()
-        self._queue: list[SolveRequest] = []
-        self.stats = {"cache_hits": 0, "cache_misses": 0, "generations": 0}
+        self._queue: list[tuple[int, SolveRequest]] = []
+        self._flights: dict[tuple, _Flight] = {}
+        self._completed: dict[int, SolveReport] = {}
+        self._next_ticket = 0
+        self.stats = {
+            "cache_hits": 0,
+            "cache_misses": 0,
+            "generations": 0,
+            "chunks": 0,
+            "refills": 0,
+            "rebuckets": 0,
+            "prep_calls": 0,
+            "prep_row_copies": 0,
+        }
 
     # -- queue ---------------------------------------------------------------
     @staticmethod
@@ -115,8 +201,35 @@ class ElasticityService:
             None if lm is None else tuple(map(tuple, np.asarray(lm).tolist())),
         )
 
-    def submit(self, request: SolveRequest) -> None:
-        self._queue.append(request)
+    def submit(self, request: SolveRequest) -> int:
+        """Non-blocking intake: enqueue a request and return its ticket.
+        Safe to call while flights are mid-chunk — the next ``step``
+        admits it into the first free slot of its key.  Invalid requests
+        fail here, before any batch state is touched."""
+        if request.materials is not None:
+            mesh = (
+                request.coarse_mesh
+                if request.coarse_mesh is not None
+                else beam_hex()
+            )
+            attrs = {int(a) for a in np.unique(mesh.attributes())}
+            missing = attrs - set(request.materials)
+            if missing:
+                raise ValueError(
+                    f"request materials missing mesh attributes "
+                    f"{sorted(missing)} (mesh has {tuple(sorted(attrs))})"
+                )
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._queue.append((ticket, request))
+        return ticket
+
+    def bucket_for(self, n: int) -> int:
+        """Smallest padding bucket (1/2/4/.../max_batch) holding n rows."""
+        b = 1
+        while b < n and b < self.max_batch:
+            b *= 2
+        return min(b, self.max_batch)
 
     # -- cache ---------------------------------------------------------------
     def _solver_for(self, key: tuple, req: SolveRequest):
@@ -139,17 +252,297 @@ class ElasticityService:
         self._solvers[key] = solver
         self.stats["cache_misses"] += 1
         while len(self._solvers) > self.cache_size:
-            self._solvers.popitem(last=False)  # evict least-recently-used
+            evicted, _ = self._solvers.popitem(last=False)  # LRU eviction
+            if evicted in self._flights:
+                # Never evict a solver with rows in flight: reinsert it as
+                # most-recently-used and drop the next-oldest idle entry.
+                self._solvers[evicted] = self._flights[evicted].solver
+                self._solvers.move_to_end(evicted, last=False)
+                for k in list(self._solvers):
+                    if k not in self._flights:
+                        del self._solvers[k]
+                        break
         return solver, False, time.perf_counter() - t0
 
-    # -- batched solve -------------------------------------------------------
+    # -- continuous batching -------------------------------------------------
+    def step(self) -> int:
+        """Advance the continuous engine by one bounded chunk per
+        in-flight discretization key: retire converged rows (their
+        reports become drainable), refill freed slots from the queue,
+        admit mid-flight submissions, and re-bucket each step program to
+        the smallest sufficient batch size.  Returns the number of
+        requests completed by this step."""
+        done_before = len(self._completed)
+        qgroups: OrderedDict[tuple, list[tuple[int, SolveRequest]]] = (
+            OrderedDict()
+        )
+        for t, req in self._queue:
+            qgroups.setdefault(self.group_key(req), []).append((t, req))
+        keys = list(self._flights)
+        keys += [k for k in qgroups if k not in self._flights]
+        admitted: set[int] = set()
+        for key in keys:
+            flight = self._flights.get(key)
+            queued = qgroups.get(key, [])
+            if flight is None:
+                solver, hit, t_setup = self._solver_for(key, queued[0][1])
+                flight = _Flight(key, solver, hit, t_setup)
+                self._flights[key] = flight
+            self._retire(flight)
+            if not flight.live_rows() and not queued:
+                del self._flights[key]
+                continue
+            admitted |= self._admit(flight, queued)
+            if flight.live_rows():
+                self._launch_chunk(flight)
+            else:
+                del self._flights[key]
+        if admitted:
+            self._queue = [
+                (t, r) for t, r in self._queue if t not in admitted
+            ]
+        return len(self._completed) - done_before
+
+    def idle(self) -> bool:
+        """True when no requests are queued or in flight."""
+        return not self._queue and not self._flights
+
+    def run_until_idle(self, max_steps: int = 1_000_000) -> None:
+        """Drive ``step`` until every submitted request has completed."""
+        steps = 0
+        while not self.idle():
+            self.step()
+            steps += 1
+            if steps >= max_steps:
+                raise RuntimeError(
+                    f"continuous engine did not drain in {max_steps} steps"
+                )
+
+    def drain(self) -> list[SolveReport]:
+        """Non-blocking: pop every completed report (submission order).
+        Pairs with ``submit`` — what's still in flight stays in flight."""
+        out = [self._completed.pop(t) for t in sorted(self._completed)]
+        return out
+
+    def solve_continuous(
+        self, requests: list[SolveRequest]
+    ) -> list[SolveReport]:
+        """Submit ``requests``, run the continuous engine until idle, and
+        return their reports in submission order (other tickets, if any,
+        stay drainable)."""
+        tickets = [self.submit(r) for r in requests]
+        self.run_until_idle()
+        return [self._completed.pop(t) for t in tickets]
+
+    def _retire(self, flight: _Flight) -> None:
+        """Emit reports for rows that stopped iterating (converged or hit
+        maxiter) during the previous chunk and free their slots."""
+        if flight.chunks == 0 or flight.state is None:
+            return
+        active = np.asarray(flight.state.active)
+        nom = np.asarray(flight.state.nom)
+        nom0 = np.asarray(flight.state.nom0)
+        thr = np.asarray(flight.state.threshold)
+        iters = np.asarray(flight.state.iters)
+        live = flight.live_rows()
+        ndof = flight.solver.fine_space.ndof
+        now = time.perf_counter()
+        for i in live:
+            if active[i]:
+                continue
+            slot = flight.slots[i]
+            req = slot.request
+            converged = bool(nom[i] <= thr[i])
+            rel = (
+                float(np.sqrt(nom[i]) / np.sqrt(nom0[i]))
+                if nom0[i] > 0
+                else 0.0
+            )
+            self._completed[slot.ticket] = SolveReport(
+                request=req,
+                key=flight.key,
+                iterations=int(iters[i]),
+                converged=converged,
+                final_rel_norm=rel,
+                ndof=ndof,
+                batch_size=len(live),
+                generation=flight.chunks - 1,
+                cache_hit=flight.cache_hit,
+                t_setup=flight.t_setup,
+                t_solve=now - slot.t_admit,
+                born_converged=bool(
+                    iters[i] == 0 and converged and nom0[i] == 0
+                ),
+                x=np.asarray(flight.state.x[i])
+                if req.keep_solution
+                else None,
+            )
+            flight.slots[i] = None
+
+    def _admit(
+        self, flight: _Flight, queued: list[tuple[int, SolveRequest]]
+    ) -> set[int]:
+        """Refill free slots from the queue, re-bucketing the pinned
+        state to the smallest sufficient batch size first.  Returns the
+        admitted tickets; leaves ``flight.pending_reset`` marking every
+        row the next chunk must (re)initialize."""
+        solver = flight.solver
+        live = flight.live_rows()
+        n_live = len(live)
+        take = queued[: self.max_batch - n_live]
+        bucket = self.bucket_for(max(n_live + len(take), 1))
+
+        if flight.state is None:
+            flight.state = solver.empty_state(bucket)
+            flight.prep = solver.empty_prep(bucket)
+            flight.slots = [None] * bucket
+            n_attr = len(solver.attr_values)
+            flight.lam = np.zeros((bucket, n_attr))
+            flight.mu = np.zeros((bucket, n_attr))
+            flight.tr = np.zeros((bucket, 3))
+            flight.tol = np.full((bucket,), 1e-6)
+            flight.prep_valid = np.zeros((bucket,), dtype=bool)
+            flight.prep_lam = np.zeros((bucket, n_attr))
+            flight.prep_mu = np.zeros((bucket, n_attr))
+            flight.bucket = bucket
+            reset = np.ones((bucket,), dtype=bool)
+        elif bucket != flight.bucket:
+            # Re-bucket: keep live rows (bitwise), fill the rest with
+            # placeholder copies of an existing row — every placeholder
+            # is reset below before the next chunk reads it.
+            filler = live[0] if live else 0
+            rows = live + [filler] * (bucket - n_live)
+            flight.state, flight.prep = solver.take_rows(
+                flight.state, flight.prep, rows
+            )
+            flight.slots = [flight.slots[i] for i in live] + [None] * (
+                bucket - n_live
+            )
+            idx = np.asarray(rows)
+            flight.lam = flight.lam[idx]
+            flight.mu = flight.mu[idx]
+            flight.tr = flight.tr[idx]
+            flight.tol = flight.tol[idx]
+            flight.prep_valid = flight.prep_valid[idx]
+            flight.prep_lam = flight.prep_lam[idx]
+            flight.prep_mu = flight.prep_mu[idx]
+            flight.bucket = bucket
+            reset = np.zeros((bucket,), dtype=bool)
+            reset[n_live:] = True
+            self.stats["rebuckets"] += 1
+        else:
+            reset = np.zeros((bucket,), dtype=bool)
+
+        admitted: set[int] = set()
+        free = [i for i, s in enumerate(flight.slots) if s is None]
+        now = time.perf_counter()
+        for (ticket, req), row in zip(take, free):
+            if flight.slots[row] is not None:  # pragma: no cover
+                raise AssertionError(f"slot {row} double-assigned")
+            flight.slots[row] = _Slot(ticket, req, now)
+            lam, mu = solver.pack_materials([req.materials or MATERIALS_BEAM])
+            flight.lam[row] = np.asarray(lam[0])
+            flight.mu[row] = np.asarray(mu[0])
+            flight.tr[row] = req.traction
+            flight.tol[row] = req.rel_tol
+            reset[row] = True
+            admitted.add(ticket)
+            self.stats["refills"] += 1
+        # Padding rows being reset borrow a real row's materials (keeps
+        # the batched operators SPD) with a zero traction: b == 0 makes
+        # them born-converged, so they cost 0 bpcg iterations and are
+        # never surfaced to callers.
+        occupied = flight.live_rows()
+        if occupied:
+            src = occupied[0]
+            for row in range(flight.bucket):
+                if flight.slots[row] is None and reset[row]:
+                    flight.lam[row] = flight.lam[src]
+                    flight.mu[row] = flight.mu[src]
+                    flight.tr[row] = 0.0
+                    flight.tol[row] = 1e-6
+        flight.pending_reset = reset if reset.any() else None
+        return admitted
+
+    def _refresh_prep(self, flight: _Flight, reset: np.ndarray) -> None:
+        """Make every reset row's prep match its (new) materials.  Rows
+        whose materials bitwise-match an already-valid row reuse that
+        row's derived data (a cheap device gather — prep depends only on
+        materials); only genuinely new material configurations pay the
+        ``prepare`` power iterations + refactorization."""
+        solver = flight.solver
+        src_rows, dst_rows, unresolved = [], [], []
+        sources = [s for s in range(flight.bucket) if flight.prep_valid[s]]
+        for r in np.flatnonzero(reset):
+            match = next(
+                (
+                    s
+                    for s in sources
+                    if np.array_equal(flight.prep_lam[s], flight.lam[r])
+                    and np.array_equal(flight.prep_mu[s], flight.mu[r])
+                ),
+                None,
+            )
+            if match is None:
+                unresolved.append(int(r))
+            else:
+                src_rows.append(match)
+                dst_rows.append(int(r))
+        if dst_rows:
+            # copy_prep_rows gathers every source before any destination
+            # is written, so a retiring row can donate its old prep even
+            # while being refilled itself.
+            flight.prep = solver.copy_prep_rows(
+                flight.prep, src_rows, dst_rows
+            )
+            self.stats["prep_row_copies"] += len(dst_rows)
+        if unresolved:
+            mask = np.zeros((flight.bucket,), dtype=bool)
+            mask[unresolved] = True
+            flight.prep = solver.prepare(
+                jnp.asarray(flight.lam, solver.dtype),
+                jnp.asarray(flight.mu, solver.dtype),
+                mask,
+                flight.prep,
+            )
+            self.stats["prep_calls"] += 1
+        flight.prep_valid[reset] = True
+        flight.prep_lam[reset] = flight.lam[reset]
+        flight.prep_mu[reset] = flight.mu[reset]
+
+    def _launch_chunk(self, flight: _Flight) -> None:
+        """One bounded advance of the flight's compiled step program,
+        re-initializing any rows flagged by the last admit."""
+        solver = flight.solver
+        reset = flight.pending_reset
+        do_reset = reset is not None
+        if do_reset:
+            self._refresh_prep(flight, reset)
+        mask = (
+            reset if do_reset else np.zeros((flight.bucket,), dtype=bool)
+        )
+        flight.state = solver.run_chunk(
+            flight.tr,
+            flight.tol,
+            mask,
+            flight.state,
+            flight.prep,
+            self.chunk_iters,
+            do_reset=do_reset,
+        )
+        flight.pending_reset = None
+        flight.chunks += 1
+        self.stats["chunks"] += 1
+
+    # -- generational batching -----------------------------------------------
     def solve(self, requests: list[SolveRequest] | None = None) -> list[SolveReport]:
-        """Drain the queue (plus ``requests``) and return one report per
-        request, in submission order."""
+        """Generational path: drain the queue (plus ``requests``) and
+        return one report per request, in submission order.  Do not mix
+        with in-flight continuous work — use ``solve_continuous`` there."""
         if requests:
             for r in requests:
                 self.submit(r)
-        pending = self._queue
+        pending = [r for _, r in self._queue]
         self._queue = []
 
         # Group by discretization key, preserving submission order.
@@ -180,7 +573,9 @@ class ElasticityService:
     ) -> list[SolveReport]:
         reqs = [r for _, r in chunk]
         n_real = len(reqs)
-        n_pad = self.max_batch - n_real
+        # Bucketed padding: the smallest sufficient bucket, not max_batch,
+        # so short generations reuse a cheaper compiled program.
+        n_pad = self.bucket_for(n_real) - n_real
 
         materials = [r.materials or MATERIALS_BEAM for r in reqs]
         tractions = np.asarray([r.traction for r in reqs], dtype=np.float64)
@@ -207,6 +602,7 @@ class ElasticityService:
         ini = np.asarray(res.initial_norm)
         ndof = solver.fine_space.ndof
         out = []
+        # Padding rows (s >= n_real) are internal and never reported.
         for s, req in enumerate(reqs):
             rel = float(fin[s] / ini[s]) if ini[s] > 0 else 0.0
             out.append(
@@ -222,6 +618,7 @@ class ElasticityService:
                     cache_hit=cache_hit,
                     t_setup=t_setup,
                     t_solve=t_solve,
+                    born_converged=bool(iters[s] == 0 and conv[s] and ini[s] == 0),
                     x=np.asarray(x[s]) if req.keep_solution else None,
                 )
             )

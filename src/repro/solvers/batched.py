@@ -1,5 +1,5 @@
 """Batched multi-scenario GMG-PCG: many parameterized elasticity solves
-in one device program.
+in one device program, resumable in bounded chunks.
 
 The paper's end-to-end solve (fused PAop operator + GMG-preconditioned
 CG) runs one scenario at a time; this module amortizes compilation and
@@ -7,23 +7,37 @@ hardware occupancy across a *batch* of scenarios (different materials,
 tractions, tolerances) the way the LM serving engine batches decode
 requests:
 
-* ``bpcg`` — PCG over a leading scenario axis inside a single
-  ``lax.while_loop``.  Per-scenario convergence is tracked with an
-  active mask: converged scenarios' ``x``/``r``/``d`` are frozen (their
-  step sizes are forced to zero and direction updates gated), the loop
-  runs until every scenario converges or hits ``maxiter``, and
-  per-scenario iteration counts are reported.
+* ``bpcg`` — PCG over a leading scenario axis.  Per-scenario convergence
+  is tracked with an active mask: converged scenarios' ``x``/``r``/``d``
+  are frozen (their step sizes are forced to zero and direction updates
+  gated), the loop runs until every scenario converges or hits
+  ``maxiter``, and per-scenario iteration counts are reported.
 
-* ``BatchedGMGSolver`` — a compiled solve *program* for one
+* the resumable step program — ``bpcg`` is split into
+  :func:`bpcg_init` (build a pinned-shape :class:`BpcgState`) and
+  :func:`bpcg_chunk` (advance all rows by a bounded number of
+  iterations).  Because frozen rows never change, running chunks of
+  ``k1`` then ``k2`` iterations produces exactly the state of one
+  uninterrupted ``k1 + k2`` run, which is what lets a serving layer
+  retire converged rows and refill their slots *between* chunks
+  (continuous batching) instead of waiting for a whole generation.
+  :func:`merge_states` resets just the refilled rows; untouched rows
+  keep their state bitwise.
+
+* ``BatchedGMGSolver`` — compiled solve *programs* for one
   discretization ``(coarse_mesh, n_h_refine, p)``.  Geometry (spaces,
   transfers, gather maps, basis tables, traction pattern) is built once
   at construction; materials, tractions and tolerances are **runtime
-  arguments** to a single jitted function that rebinds per-scenario
-  material fields through ``ElasticityOperator.with_materials``, runs
-  per-scenario power iterations for the Chebyshev smoothers, factors
-  the coarse level with a batched in-trace Cholesky, and drives ``bpcg``
-  with the batched GMG V-cycle.  Re-solving with new scenario data hits
-  the compiled program — no retrace, no hierarchy rebuild.
+  arguments**.  Two jitted entry points drive the step program:
+  ``prepare`` folds (new) per-scenario materials into the operators'
+  per-row weighted fields in place and recomputes the derived
+  per-scenario data (smoother diagonals + lambda_max, the coarse
+  Cholesky factor) for exactly the reset rows; ``run_chunk`` rebuilds
+  the hierarchy from that prep pytree (no power iterations, no
+  refactorization) and advances the state by ``k`` iterations.  The
+  monolithic ``solve`` is the same machinery run to completion in one
+  call.  Re-solving with new scenario data hits the compiled programs —
+  no retrace, no hierarchy rebuild.
 
 The scenario axis is threaded through ``ChebyshevSmoother``,
 ``GMGPreconditioner`` and ``Transfer``; operators fold it into the
@@ -45,10 +59,19 @@ from repro.fem.mesh import HexMesh
 from repro.fem.space import H1Space
 from repro.fem.transfer import make_transfer
 from repro.solvers.chebyshev import ChebyshevSmoother, _expand
-from repro.solvers.coarse import make_batched_coarse_solver
+from repro.solvers.coarse import cholesky_solver, probe_coarse_matrix
 from repro.solvers.gmg import GMGPreconditioner, Level, hierarchy_spaces
 
-__all__ = ["bpcg", "BPCGResult", "BatchedGMGSolver"]
+__all__ = [
+    "bpcg",
+    "bpcg_init",
+    "bpcg_chunk",
+    "bpcg_result",
+    "merge_states",
+    "BpcgState",
+    "BPCGResult",
+    "BatchedGMGSolver",
+]
 
 
 @jax.tree_util.register_dataclass
@@ -61,6 +84,26 @@ class BPCGResult:
     initial_norm: Any  # (S,)
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class BpcgState:
+    """Pinned-shape resumable PCG state (one row per batch slot).
+
+    Everything the iteration needs lives here, so a compiled
+    ``run_chunk(state, k)`` can advance the batch, hand the state back to
+    the host for retire/refill decisions, and resume bit-identically."""
+
+    x: Any  # (S, ...) iterates
+    r: Any  # (S, ...) residuals
+    z: Any  # (S, ...) preconditioned residuals
+    d: Any  # (S, ...) search directions
+    nom: Any  # (S,) current (B r, r)
+    nom0: Any  # (S,) (B r, r) at the row's (re)start
+    threshold: Any  # (S,) per-row stopping value for nom
+    iters: Any  # (S,) int32 iterations since the row's (re)start
+    active: Any  # (S,) bool — still iterating
+
+
 def _dots(a, b):
     """Per-scenario inner products: contract everything but axis 0."""
     return jnp.sum(
@@ -71,6 +114,138 @@ def _dots(a, b):
 # (S,) coefficients broadcast against (S, ...) vectors with the same
 # right-pad rule the batched Chebyshev smoother uses.
 _col = _expand
+
+
+def bpcg_init(
+    A: Callable,
+    b,
+    M: Callable | None = None,
+    *,
+    x0=None,
+    rel_tol=1e-6,
+    abs_tol=0.0,
+) -> BpcgState:
+    """Build the initial :class:`BpcgState` for ``A x = b``.
+
+    MFEM-style thresholds, per scenario: a row stops when
+    ``nom <= max(nom0 * rel_tol^2, abs_tol^2)``; ``rel_tol``/``abs_tol``
+    may be scalars or (S,) arrays.  A row with a zero RHS is born
+    converged (0 iterations) — this is also what makes padded batch
+    slots free."""
+    if M is None:
+        M = lambda r: r
+    s = b.shape[0]
+    if x0 is None:
+        x = jnp.zeros_like(b)
+        r = b  # A is linear: A(0) == 0 exactly
+    else:
+        x = x0
+        r = b - A(x)
+    z = M(r)
+    nom0 = _dots(z, r)
+    rel = jnp.broadcast_to(jnp.asarray(rel_tol, dtype=nom0.dtype), (s,))
+    ab = jnp.broadcast_to(jnp.asarray(abs_tol, dtype=nom0.dtype), (s,))
+    threshold = jnp.maximum(nom0 * rel**2, ab**2)
+    return BpcgState(
+        x=x,
+        r=r,
+        z=z,
+        d=z,
+        nom=nom0,
+        nom0=nom0,
+        threshold=threshold,
+        iters=jnp.zeros((s,), dtype=jnp.int32),
+        active=nom0 > threshold,
+    )
+
+
+def bpcg_chunk(
+    A: Callable,
+    state: BpcgState,
+    M: Callable | None = None,
+    *,
+    k_iters=None,
+    maxiter: int = 5000,
+) -> BpcgState:
+    """Advance every active row by up to ``k_iters`` PCG iterations
+    (unbounded — run to convergence/``maxiter`` — when ``k_iters`` is
+    None).
+
+    Chunked resumption is exact: inactive rows are frozen (alpha forced
+    to 0, direction updates gated), so ``chunk(k1)`` followed by
+    ``chunk(k2)`` yields the same state as one ``chunk(k1 + k2)`` call.
+    ``k_iters`` may be a traced value, so one compiled program serves
+    every chunk length."""
+    if M is None:
+        M = lambda r: r
+
+    def cond(carry):
+        st, step = carry
+        go = jnp.any(st.active)
+        if k_iters is not None:
+            go = go & (step < k_iters)
+        return go
+
+    def body(carry):
+        st, step = carry
+        x, r, nom, active = st.x, st.r, st.nom, st.active
+        ad = A(st.d)
+        den = _dots(st.d, ad)
+        # Inactive rows get alpha = 0 (frozen); den == 0 cannot occur for
+        # an active SPD row (d != 0 there) but is guarded so one bad or
+        # retired scenario can never NaN the rest of the batch.
+        ok = active & (den > 0)
+        alpha = jnp.where(ok, nom / jnp.where(den == 0, 1.0, den), 0.0)
+        x = x + _col(alpha, x.ndim) * st.d
+        r = r - _col(alpha, r.ndim) * ad
+        z = M(r)
+        betanom = _dots(z, r)
+        beta = jnp.where(ok, betanom / jnp.where(nom == 0, 1.0, nom), 0.0)
+        d = jnp.where(
+            _col(active, st.d.ndim), z + _col(beta, st.d.ndim) * st.d, st.d
+        )
+        nom = jnp.where(active, betanom, nom)
+        # Count only real steps (ok), matching scalar pcg: an aborted
+        # degenerate direction (den <= 0) takes no step and adds none.
+        iters = st.iters + ok.astype(jnp.int32)
+        active = ok & (nom > st.threshold) & (iters < maxiter)
+        new = dataclasses.replace(
+            st, x=x, r=r, z=z, d=d, nom=nom, iters=iters, active=active
+        )
+        return (new, step + 1)
+
+    state, _ = jax.lax.while_loop(
+        cond, body, (state, jnp.zeros((), dtype=jnp.int32))
+    )
+    return state
+
+
+def merge_states(reset_mask, fresh: BpcgState, old: BpcgState) -> BpcgState:
+    """Per-row state merge: rows selected by ``reset_mask`` (S,) take
+    ``fresh`` (a just-initialized state for their new RHS/tolerance),
+    the rest keep ``old`` bitwise — refilling a slot must not perturb
+    the rows still in flight."""
+    mask = jnp.asarray(reset_mask)
+
+    def pick(f, o):
+        return jnp.where(_col(mask, jnp.ndim(f)), f, o)
+
+    return BpcgState(
+        **{
+            fld.name: pick(getattr(fresh, fld.name), getattr(old, fld.name))
+            for fld in dataclasses.fields(BpcgState)
+        }
+    )
+
+
+def bpcg_result(state: BpcgState) -> BPCGResult:
+    return BPCGResult(
+        x=state.x,
+        iterations=state.iters,
+        converged=state.nom <= state.threshold,
+        final_norm=jnp.sqrt(jnp.abs(state.nom)),
+        initial_norm=jnp.sqrt(jnp.abs(state.nom0)),
+    )
 
 
 def bpcg(
@@ -89,73 +264,26 @@ def bpcg(
     ``A`` and ``M`` map (S, ...) batches to (S, ...) batches with no
     cross-scenario coupling; ``rel_tol``/``abs_tol`` may be scalars or
     (S,) arrays (per-scenario tolerances).  Scenarios that converge stop
-    updating (alpha forced to 0, direction frozen) while the rest keep
-    iterating; the loop exits when no scenario is active.  A scenario
-    with a zero RHS is born converged (0 iterations) — this is also what
-    makes padded batch slots free.
-    """
-    if M is None:
-        M = lambda r: r
-    x = jnp.zeros_like(b) if x0 is None else x0
-    s = b.shape[0]
-
-    r = b - A(x)
-    z = M(r)
-    nom0 = _dots(z, r)
-    rel = jnp.broadcast_to(jnp.asarray(rel_tol, dtype=nom0.dtype), (s,))
-    ab = jnp.broadcast_to(jnp.asarray(abs_tol, dtype=nom0.dtype), (s,))
-    # MFEM: r0 = max(nom0 * rel_tol^2, abs_tol^2), per scenario.
-    threshold = jnp.maximum(nom0 * rel**2, ab**2)
-    active0 = nom0 > threshold
-    iters0 = jnp.zeros((s,), dtype=jnp.int32)
-
-    def cond(state):
-        return jnp.any(state[-1])
-
-    def body(state):
-        x, r, z, d, nom, iters, active = state
-        ad = A(d)
-        den = _dots(d, ad)
-        # Inactive rows get alpha = 0 (frozen); den == 0 cannot occur for
-        # an active SPD row (d != 0 there) but is guarded so one bad or
-        # retired scenario can never NaN the rest of the batch.
-        ok = active & (den > 0)
-        alpha = jnp.where(ok, nom / jnp.where(den == 0, 1.0, den), 0.0)
-        x = x + _col(alpha, x.ndim) * d
-        r = r - _col(alpha, r.ndim) * ad
-        z = M(r)
-        betanom = _dots(z, r)
-        beta = jnp.where(ok, betanom / jnp.where(nom == 0, 1.0, nom), 0.0)
-        d = jnp.where(
-            _col(active, d.ndim), z + _col(beta, d.ndim) * d, d
-        )
-        nom = jnp.where(active, betanom, nom)
-        # Count only real steps (ok), matching scalar pcg: an aborted
-        # degenerate direction (den <= 0) takes no step and adds none.
-        iters = iters + ok.astype(jnp.int32)
-        active = ok & (nom > threshold) & (iters < maxiter)
-        return (x, r, z, d, nom, iters, active)
-
-    state = (x, r, z, z, nom0, iters0, active0)
-    x, r, z, d, nom, iters, active = jax.lax.while_loop(cond, body, state)
-    return BPCGResult(
-        x=x,
-        iterations=iters,
-        converged=nom <= threshold,
-        final_norm=jnp.sqrt(jnp.abs(nom)),
-        initial_norm=jnp.sqrt(jnp.abs(nom0)),
-    )
+    updating while the rest keep iterating; the loop exits when no
+    scenario is active.  Implemented as the resumable step program run
+    in one uninterrupted chunk (see :func:`bpcg_init` /
+    :func:`bpcg_chunk`)."""
+    state = bpcg_init(A, b, M, x0=x0, rel_tol=rel_tol, abs_tol=abs_tol)
+    state = bpcg_chunk(A, state, M, k_iters=None, maxiter=maxiter)
+    return bpcg_result(state)
 
 
 class BatchedGMGSolver:
-    """One compiled multi-scenario solve program per discretization.
+    """Compiled multi-scenario solve programs for one discretization.
 
     Construction builds everything material-independent for the beam
     benchmark family: the mesh/degree hierarchy, transfer operators,
     element->attribute index maps, and the boundary traction pattern.
     ``solve`` takes per-scenario attribute materials, traction vectors
-    and tolerances; its body is jitted once per batch size and reused
-    for every subsequent batch of the same shape.
+    and tolerances and runs to completion; ``prepare`` + ``run_chunk``
+    expose the same solve as a resumable step program for continuous
+    batching.  Each jitted entry point is traced once per batch size
+    (bucket) and reused for every subsequent call of the same shape.
     """
 
     def __init__(
@@ -199,7 +327,7 @@ class BatchedGMGSolver:
         for i, sp in enumerate(spaces):
             lvl_assembly = assembly if i > 0 else "paop"
             # Base operators are geometry/tables carriers only: every
-            # solve binds per-scenario fields via with_materials.
+            # solve binds per-scenario fields via with_materials*.
             op = ElasticityOperator(
                 sp,
                 assembly=lvl_assembly,
@@ -229,27 +357,158 @@ class BatchedGMGSolver:
         )
         self._fine_ess = jnp.asarray(self._base_ops[-1].ess_mask)
         self._jit_solve = jax.jit(self._solve_impl)
+        self._jit_prepare = jax.jit(self._prepare_impl)
+        self._jit_chunk = jax.jit(
+            self._chunk_impl, static_argnames=("do_reset",)
+        )
 
     @property
     def fine_space(self) -> H1Space:
         return self.spaces[-1]
 
-    # -- traced body ---------------------------------------------------------
-    def _solve_impl(self, lam_vals, mu_vals, tractions, rel_tol):
+    # -- prep pytree ---------------------------------------------------------
+    # prep carries every per-scenario derived quantity the step program
+    # needs, as plain arrays: the operators' weighted material fields per
+    # level, the smoother inverse diagonals + lambda_max per smoothed
+    # level, and the coarse Cholesky factor.  It is produced by
+    # ``prepare`` (jitted) and consumed by ``run_chunk`` (jitted), so
+    # chunks pay neither power iterations nor refactorization.
+
+    def empty_prep(self, s: int) -> dict:
+        """Zero-filled prep of the right shapes for an S-row batch.  Only
+        meaningful as the ``prep`` argument of a ``prepare`` call whose
+        reset mask covers every row that will ever be read."""
+        lam_w, mu_w, dinv, lmax = [], [], [], []
+        for i, (base, sp) in enumerate(zip(self._base_ops, self.spaces)):
+            shape = (s * sp.nelem,) + base.w_detj.shape
+            lam_w.append(np.zeros(shape, dtype=np.dtype(self.dtype)))
+            mu_w.append(np.zeros(shape, dtype=np.dtype(self.dtype)))
+            if i > 0:
+                dinv.append(
+                    np.zeros((s, sp.nscalar, 3), dtype=np.dtype(self.dtype))
+                )
+                lmax.append(np.zeros((s,), dtype=np.dtype(self.dtype)))
+        n0 = self.spaces[0].nscalar * 3
+        return {
+            "lam_w": tuple(lam_w),
+            "mu_w": tuple(mu_w),
+            "dinv": tuple(dinv),
+            "lmax": tuple(lmax),
+            "chol": np.zeros((s, n0, n0), dtype=np.dtype(self.dtype)),
+        }
+
+    def empty_state(self, s: int) -> BpcgState:
+        """All-rows-retired state of the right shapes for an S-row batch
+        (every row must be reset before its first chunk)."""
+        vec = np.zeros((s, self.fine_space.nscalar, 3), dtype=np.dtype(self.dtype))
+        row = np.zeros((s,), dtype=np.dtype(self.dtype))
+        return BpcgState(
+            x=vec,
+            r=vec,
+            z=vec,
+            d=vec,
+            nom=row,
+            nom0=row,
+            threshold=row,
+            iters=np.zeros((s,), dtype=np.int32),
+            active=np.zeros((s,), dtype=bool),
+        )
+
+    def take_rows(self, state: BpcgState, prep: dict, rows):
+        """Gather batch rows (host-side re-bucketing): returns (state,
+        prep) whose row i is the old row ``rows[i]``.  ``rows`` may
+        repeat indices (placeholder rows that the caller is about to
+        reset) and may be shorter or longer than the old batch."""
+        rows = np.asarray(rows, dtype=np.int32)
+        new_state = BpcgState(
+            **{
+                fld.name: jnp.asarray(getattr(state, fld.name))[rows]
+                for fld in dataclasses.fields(BpcgState)
+            }
+        )
+
+        def fold_take(w, ne):
+            s_old = w.shape[0] // ne
+            folded = jnp.asarray(w).reshape((s_old, ne) + w.shape[1:])
+            return folded[rows].reshape((-1,) + w.shape[1:])
+
+        new_prep = {
+            "lam_w": tuple(
+                fold_take(w, sp.nelem)
+                for w, sp in zip(prep["lam_w"], self.spaces)
+            ),
+            "mu_w": tuple(
+                fold_take(w, sp.nelem)
+                for w, sp in zip(prep["mu_w"], self.spaces)
+            ),
+            "dinv": tuple(jnp.asarray(d)[rows] for d in prep["dinv"]),
+            "lmax": tuple(jnp.asarray(l)[rows] for l in prep["lmax"]),
+            "chol": jnp.asarray(prep["chol"])[rows],
+        }
+        return new_state, new_prep
+
+    def copy_prep_rows(self, prep: dict, src, dst) -> dict:
+        """Duplicate prepared batch rows: row ``dst[i]`` takes row
+        ``src[i]``'s derived data (weighted fields, smoother dinv/lmax,
+        coarse factor) bitwise.  Since prep depends only on a row's
+        materials (geometry is shared), a refilled slot whose materials
+        match an already-prepared row can skip ``prepare`` — no power
+        iterations, no refactorization — which is the common case for
+        serving traffic with a bounded material vocabulary."""
+        src = np.asarray(src, dtype=np.int32)
+        dst = np.asarray(dst, dtype=np.int32)
+
+        def fold_copy(w, ne):
+            s = w.shape[0] // ne
+            f = jnp.asarray(w).reshape((s, ne) + w.shape[1:])
+            return f.at[dst].set(f[src]).reshape((-1,) + w.shape[1:])
+
+        def row_copy(a):
+            a = jnp.asarray(a)
+            return a.at[dst].set(a[src])
+
+        return {
+            "lam_w": tuple(
+                fold_copy(w, sp.nelem)
+                for w, sp in zip(prep["lam_w"], self.spaces)
+            ),
+            "mu_w": tuple(
+                fold_copy(w, sp.nelem)
+                for w, sp in zip(prep["mu_w"], self.spaces)
+            ),
+            "dinv": tuple(row_copy(d) for d in prep["dinv"]),
+            "lmax": tuple(row_copy(l) for l in prep["lmax"]),
+            "chol": row_copy(prep["chol"]),
+        }
+
+    # -- traced bodies -------------------------------------------------------
+    def _prepare_body(self, lam_vals, mu_vals, reset_mask, prep) -> dict:
+        """Fold the (S, n_attr) material values of the masked rows into
+        the per-level weighted fields in place, and recompute the derived
+        per-scenario data (smoother dinv/lambda_max, coarse Cholesky) for
+        exactly those rows; unmasked rows keep their prep bitwise."""
         s = lam_vals.shape[0]
-        levels = []
-        coarse_solve = None
+        lam_w, mu_w, dinv, lmax = [], [], [], []
+        chol = None
         for i, (base, idx) in enumerate(zip(self._base_ops, self._attr_idx)):
             sp = self.spaces[i]
-            op = base.with_materials(lam_vals[:, idx], mu_vals[:, idx])
+            prev = base.with_material_weights(
+                prep["lam_w"][i], prep["mu_w"][i], s
+            )
+            op = prev.with_materials_rows(
+                lam_vals[:, idx], mu_vals[:, idx], reset_mask
+            )
+            lam_w.append(op.lam_w)
+            mu_w.append(op.mu_w)
             cop = op.constrained()
-            smoother = None
             if i == 0:
-                coarse_solve = make_batched_coarse_solver(
-                    cop, sp.nscalar, s, self.dtype
+                K = probe_coarse_matrix(cop, sp.nscalar, s, self.dtype)
+                L = jnp.linalg.cholesky(K)
+                chol = jnp.where(
+                    reset_mask[:, None, None], L, prep["chol"]
                 )
             else:
-                smoother = ChebyshevSmoother.setup(
+                sm = ChebyshevSmoother.setup(
                     cop,
                     cop.diagonal(),
                     shape=(s, sp.nscalar, 3),
@@ -257,6 +516,42 @@ class BatchedGMGSolver:
                     degree=self.cheb_degree,
                     power_iters=self.power_iters,
                     batch_dims=1,
+                )
+                dinv.append(
+                    jnp.where(
+                        reset_mask[:, None, None], sm.dinv, prep["dinv"][i - 1]
+                    )
+                )
+                lmax.append(
+                    jnp.where(reset_mask, sm.lmax, prep["lmax"][i - 1])
+                )
+        return {
+            "lam_w": tuple(lam_w),
+            "mu_w": tuple(mu_w),
+            "dinv": tuple(dinv),
+            "lmax": tuple(lmax),
+            "chol": chol,
+        }
+
+    def _build_from_prep(self, prep):
+        """Hierarchy + preconditioner from a prep pytree: binds the
+        stored weighted fields and smoother data — no power iterations,
+        no probing, no factorization."""
+        s = prep["chol"].shape[0]
+        levels = []
+        for i, base in enumerate(self._base_ops):
+            sp = self.spaces[i]
+            op = base.with_material_weights(
+                prep["lam_w"][i], prep["mu_w"][i], s
+            )
+            cop = op.constrained()
+            smoother = None
+            if i > 0:
+                smoother = ChebyshevSmoother(
+                    A=cop,
+                    dinv=prep["dinv"][i - 1],
+                    lmax=prep["lmax"][i - 1],
+                    degree=self.cheb_degree,
                 )
             levels.append(
                 Level(
@@ -268,17 +563,42 @@ class BatchedGMGSolver:
                 )
             )
         gmg = GMGPreconditioner(
-            levels=levels, transfers=self.transfers, coarse_solve=coarse_solve
+            levels=levels,
+            transfers=self.transfers,
+            coarse_solve=cholesky_solver(prep["chol"]),
         )
+        return levels, gmg
+
+    def _rhs(self, tractions):
         b = self._traction_pattern[None, :, None] * tractions[:, None, :]
-        b = jnp.where(self._fine_ess, 0.0, b)  # homogeneous elimination
-        return bpcg(
-            levels[-1].constrained,
-            b,
-            M=gmg,
-            rel_tol=rel_tol,
-            maxiter=self.maxiter,
+        return jnp.where(self._fine_ess, 0.0, b)  # homogeneous elimination
+
+    def _prepare_impl(self, lam_vals, mu_vals, reset_mask, prep) -> dict:
+        return self._prepare_body(lam_vals, mu_vals, reset_mask, prep)
+
+    def _chunk_impl(
+        self, tractions, rel_tol, reset_mask, state, prep, k_iters,
+        *, do_reset: bool,
+    ) -> BpcgState:
+        levels, gmg = self._build_from_prep(prep)
+        A = levels[-1].constrained
+        if do_reset:
+            fresh = bpcg_init(A, self._rhs(tractions), M=gmg, rel_tol=rel_tol)
+            state = merge_states(reset_mask, fresh, state)
+        return bpcg_chunk(
+            A, state, M=gmg, k_iters=k_iters, maxiter=self.maxiter
         )
+
+    def _solve_impl(self, lam_vals, mu_vals, tractions, rel_tol):
+        s = lam_vals.shape[0]
+        prep = self._prepare_body(
+            lam_vals, mu_vals, jnp.ones((s,), dtype=bool), self.empty_prep(s)
+        )
+        levels, gmg = self._build_from_prep(prep)
+        A = levels[-1].constrained
+        state = bpcg_init(A, self._rhs(tractions), M=gmg, rel_tol=rel_tol)
+        state = bpcg_chunk(A, state, M=gmg, k_iters=None, maxiter=self.maxiter)
+        return bpcg_result(state)
 
     # -- public entry --------------------------------------------------------
     def pack_materials(self, materials: list[dict]) -> tuple[Any, Any]:
@@ -296,6 +616,30 @@ class BatchedGMGSolver:
             for ai, a in enumerate(self.attr_values):
                 lam[si, ai], mu[si, ai] = m[a]
         return jnp.asarray(lam, self.dtype), jnp.asarray(mu, self.dtype)
+
+    def prepare(self, lam_vals, mu_vals, reset_mask, prep) -> dict:
+        """Jitted: fold the masked rows' new materials into the per-row
+        operator fields and refresh their derived data (see
+        ``_prepare_body``).  One trace per batch size."""
+        return self._jit_prepare(lam_vals, mu_vals, reset_mask, prep)
+
+    def run_chunk(
+        self, tractions, rel_tol, reset_mask, state, prep, k_iters,
+        *, do_reset: bool = False,
+    ) -> BpcgState:
+        """Jitted: advance the batch by up to ``k_iters`` iterations.
+        With ``do_reset`` the masked rows are first re-initialized for
+        their (new) tractions/tolerances: x = 0, r = b, fresh thresholds,
+        iteration count 0.  ``k_iters`` is a runtime argument — any chunk
+        length reuses the same compiled program."""
+        tractions = jnp.asarray(tractions, self.dtype)
+        rel = jnp.broadcast_to(
+            jnp.asarray(rel_tol, self.dtype), (tractions.shape[0],)
+        )
+        return self._jit_chunk(
+            tractions, rel, reset_mask, state, prep,
+            jnp.asarray(k_iters, dtype=jnp.int32), do_reset=do_reset,
+        )
 
     def solve(
         self,

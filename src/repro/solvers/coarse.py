@@ -28,20 +28,20 @@ from repro.core.fa import SparseMatrix, assemble_sparse
 from repro.core.operators import ElasticityOperator
 from repro.solvers.cg import pcg
 
-__all__ = ["make_coarse_solver", "make_batched_coarse_solver"]
+__all__ = [
+    "make_coarse_solver",
+    "make_batched_coarse_solver",
+    "probe_coarse_matrix",
+    "cholesky_solver",
+]
 
 
-def make_batched_coarse_solver(cop, nscalar: int, nbatch: int, dtype) -> Callable:
-    """Dense Cholesky coarse solve for a scenario-batched constrained
-    operator, built by probing the operator with identity columns.
-
-    Unlike the scipy assembly below this is pure jax (vmap + batched
-    cholesky), so it traces: a jitted batched solve can take per-scenario
-    materials as runtime arguments and still factor its coarse level
-    inside the same device program.  The coarsest level is small by
-    construction (paper Sec. 3.2), so the n probing applications are
-    cheap relative to one fine-level operator action.
-    """
+def probe_coarse_matrix(cop, nscalar: int, nbatch: int, dtype):
+    """Densify a scenario-batched constrained coarse operator by probing
+    it with identity columns: returns the (S, n, n) stack of per-scenario
+    coarse matrices (n = nscalar * 3).  Pure jax, so it traces — a jitted
+    batched solve can take per-scenario materials as runtime arguments
+    and still assemble its coarse level inside the same device program."""
     n = nscalar * 3
 
     def col(e):
@@ -49,15 +49,31 @@ def make_batched_coarse_solver(cop, nscalar: int, nbatch: int, dtype) -> Callabl
         return cop(xb).reshape(nbatch, n)
 
     cols = jax.vmap(col)(jnp.eye(n, dtype=dtype))  # (n_j, S, n_i)
-    K = jnp.moveaxis(cols, 0, -1)  # (S, i, j)
-    L = jnp.linalg.cholesky(K)
+    return jnp.moveaxis(cols, 0, -1)  # (S, i, j)
+
+
+def cholesky_solver(L) -> Callable:
+    """solve(b) from a prefactorized batched lower-Cholesky stack
+    (S, n, n).  The factor is plain array data, so the resumable batched
+    solve can carry it across chunk boundaries in its prep pytree."""
 
     def solve(b):
+        nbatch, n = L.shape[0], L.shape[1]
         flat = b.reshape(nbatch, n)
         x = jax.vmap(lambda Ls, bs: jsl.cho_solve((Ls, True), bs))(L, flat)
         return x.reshape(b.shape)
 
     return solve
+
+
+def make_batched_coarse_solver(cop, nscalar: int, nbatch: int, dtype) -> Callable:
+    """Dense Cholesky coarse solve for a scenario-batched constrained
+    operator: probe the per-scenario matrices, factor them in-trace
+    (batched cholesky), and return the prefactorized solve.  The coarsest
+    level is small by construction (paper Sec. 3.2), so the n probing
+    applications are cheap relative to one fine-level operator action."""
+    K = probe_coarse_matrix(cop, nscalar, nbatch, dtype)
+    return cholesky_solver(jnp.linalg.cholesky(K))
 
 
 def make_coarse_solver(

@@ -81,16 +81,41 @@ def test_second_same_key_batch_hits_cache(service, mixed_batch_reports):
 
 def test_partial_generation_padding(service, mixed_batch_reports):
     """3 requests with max_batch=8: the generation is padded with
-    zero-traction rows, which must not affect the real solutions."""
+    zero-traction rows, which must not affect the real solutions and
+    must never surface as reports."""
     reqs = [
         SolveRequest(p=2, refine=1, materials=MATS_A, rel_tol=1e-8,
                      traction=(0.0, 0.0, -1e-2 * (i + 1)))
         for i in range(3)
     ]
     reports = service.solve(reqs)
-    assert len(reports) == 3
+    assert len(reports) == 3  # padding rows are internal only
     assert all(r.converged for r in reports)
     assert all(r.batch_size == 3 for r in reports)
+    # real rows are never marked as padding-style born-converged
+    assert not any(r.born_converged for r in reports)
+
+
+def test_zero_rhs_request_distinguished_from_padding():
+    """A real request with a zero traction converges before iteration 1
+    just like a padding row — the report must say so (born_converged)
+    instead of a bare residual 0.0, on both scheduling paths."""
+    service = ElasticityService(max_batch=4)
+    reqs = [
+        SolveRequest(p=1, refine=0, materials=MATS_A, rel_tol=1e-8,
+                     traction=(0.0, 0.0, 0.0)),
+        SolveRequest(p=1, refine=0, materials=MATS_A, rel_tol=1e-8),
+    ]
+    zero_rep, live_rep = service.solve(list(reqs))
+    assert zero_rep.born_converged
+    assert zero_rep.converged and zero_rep.iterations == 0
+    assert zero_rep.final_rel_norm == 0.0
+    assert not live_rep.born_converged and live_rep.iterations > 0
+
+    zero_rep2, live_rep2 = service.solve_continuous(list(reqs))
+    assert zero_rep2.born_converged and zero_rep2.iterations == 0
+    assert not live_rep2.born_converged
+    assert live_rep2.iterations == live_rep.iterations
 
 
 def test_mixed_discretization_queue():
