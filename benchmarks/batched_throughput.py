@@ -15,8 +15,16 @@ continuous batching retires loose rows early, refills their slots from
 the queue, and lets the draining tail shrink to smaller padding buckets.
 Reports throughput and per-request tail latency for both.
 
+``--devices N`` shards the scenario axis over N devices (forcing N
+virtual XLA host devices on CPU — set before backend init, which is why
+the heavy imports live inside the functions).  Throughput always counts
+REAL scenarios only: padding rows added for bucket or device alignment
+ride along in ``SolveReport.padded_rows`` and are excluded from the
+scenarios/sec math, so ``--devices 8`` numbers are honest.
+
     PYTHONPATH=src python -m benchmarks.batched_throughput [--quick]
     PYTHONPATH=src python -m benchmarks.batched_throughput --continuous
+    PYTHONPATH=src python -m benchmarks.batched_throughput --devices 8 --continuous
 """
 
 from __future__ import annotations
@@ -31,16 +39,13 @@ jax.config.update("jax_enable_x64", True)
 import numpy as np  # noqa: E402
 
 from benchmarks.common import fmt_table  # noqa: E402
-from repro.launch.solve import solve_beam  # noqa: E402
-from repro.serve.elasticity_service import (  # noqa: E402
-    ElasticityService,
-    SolveRequest,
-)
 
 P, REFINE = 2, 1
 
 
-def make_requests(n: int, rel_tol: float = 1e-6) -> list[SolveRequest]:
+def make_requests(n: int, rel_tol: float = 1e-6):
+    from repro.serve.elasticity_service import SolveRequest
+
     return [
         SolveRequest(
             p=P,
@@ -53,24 +58,38 @@ def make_requests(n: int, rel_tol: float = 1e-6) -> list[SolveRequest]:
     ]
 
 
-def bench_batched(batch: int, repeats: int) -> dict:
-    service = ElasticityService(max_batch=batch)
+def _real_throughput(reports, dt: float) -> float:
+    """Scenarios/sec over REAL requests.  ``reports`` has one entry per
+    real request by construction (padding is never surfaced) — guard that
+    invariant here so a padding-accounting regression can't silently
+    inflate --devices numbers."""
+    assert all(r.padded_rows >= r.batch_size > 0 for r in reports)
+    return len(reports) / dt
+
+
+def bench_batched(batch: int, repeats: int, mesh=None) -> dict:
+    from repro.serve.elasticity_service import ElasticityService
+
+    service = ElasticityService(max_batch=batch, mesh=mesh)
     # Warm: builds the hierarchy and compiles the batched program.
     t0 = time.perf_counter()
     service.solve(make_requests(batch))
     t_warm = time.perf_counter() - t0
     # Steady state: same key -> cached program, setup must be ~0.
-    times, setups = [], []
+    times, setups, pad = [], [], 0
     for _ in range(repeats):
         reqs = make_requests(batch)
         t0 = time.perf_counter()
         reports = service.solve(reqs)
         times.append(time.perf_counter() - t0)
         setups.append(reports[0].t_setup)
+        pad = max(pad, reports[0].padded_rows)
         assert all(r.converged for r in reports)
+        assert len(reports) == batch  # padding rows never surfaced
     t = float(np.median(times))
     return {
         "batch": batch,
+        "padded_rows": pad,
         "scenarios_per_s": batch / t,
         "t_generation_s": t,
         "t_warm_s": t_warm,
@@ -79,6 +98,8 @@ def bench_batched(batch: int, repeats: int) -> dict:
 
 
 def bench_sequential(n: int) -> dict:
+    from repro.launch.solve import solve_beam
+
     t0 = time.perf_counter()
     for req in make_requests(n):
         rep = solve_beam(
@@ -93,6 +114,7 @@ def bench_sequential(n: int) -> dict:
     t = time.perf_counter() - t0
     return {
         "batch": "sequential",
+        "padded_rows": n,
         "scenarios_per_s": n / t,
         "t_generation_s": t / n,
         "t_warm_s": 0.0,
@@ -100,13 +122,13 @@ def bench_sequential(n: int) -> dict:
     }
 
 
-def make_mixed_tol_requests(
-    n: int, loose: float = 1e-4, tight: float = 1e-10
-) -> list[SolveRequest]:
+def make_mixed_tol_requests(n: int, loose: float = 1e-4, tight: float = 1e-10):
     """Mixed-tolerance workload: one tight-tolerance request per four
     loose ones, with varied materials and tractions — the serving regime
     where a minority of slow scenarios gates every generation while the
     loose majority could have streamed through the freed slots."""
+    from repro.serve.elasticity_service import SolveRequest
+
     return [
         SolveRequest(
             p=P,
@@ -129,29 +151,31 @@ def _latency_percentiles(latencies: list[float]) -> tuple[float, float]:
     )
 
 
-def _time_generational(service: ElasticityService, n: int):
+def _time_generational(service, n: int):
     reqs = make_mixed_tol_requests(n)
     t0 = time.perf_counter()
     reports = service.solve(reqs)
     dt = time.perf_counter() - t0
     assert all(r.converged for r in reports)
     assert all(r.final_rel_norm <= r.request.rel_tol for r in reports)
+    assert len(reports) == n  # padding rows never surfaced
     # A request is done when its generation retires; its latency is the
     # cumulative time of all generations up to and including its own
     # (generations of one key run back-to-back).
     gen_t = {r.generation: r.t_solve for r in reports}
     cum = np.cumsum([gen_t[g] for g in sorted(gen_t)])
-    return dt, [float(cum[r.generation]) for r in reports]
+    return dt, reports, [float(cum[r.generation]) for r in reports]
 
 
-def _time_continuous(service: ElasticityService, n: int):
+def _time_continuous(service, n: int):
     reqs = make_mixed_tol_requests(n)
     t0 = time.perf_counter()
     reports = service.solve_continuous(reqs)
     dt = time.perf_counter() - t0
     assert all(r.converged for r in reports)
     assert all(r.final_rel_norm <= r.request.rel_tol for r in reports)
-    return dt, [r.t_solve for r in reports]  # admission -> retirement
+    assert len(reports) == n  # padding rows never surfaced
+    return dt, reports, [r.t_solve for r in reports]  # admission -> retirement
 
 
 def run_continuous(
@@ -159,6 +183,7 @@ def run_continuous(
     n_requests: int | None = None,
     repeats: int = 3,
     chunk_iters: int = 8,
+    mesh=None,
 ) -> list[dict]:
     """Continuous vs generational on the mixed-tolerance workload.
 
@@ -166,9 +191,13 @@ def run_continuous(
     policy reports its best repeat: on a shared/throttled CPU a transient
     co-tenant spike would otherwise land on one policy's block and
     dominate the ratio."""
+    from repro.serve.elasticity_service import ElasticityService
+
     n = 2 * batch if n_requests is None else n_requests
-    svc_gen = ElasticityService(max_batch=batch)
-    svc_cont = ElasticityService(max_batch=batch, chunk_iters=chunk_iters)
+    svc_gen = ElasticityService(max_batch=batch, mesh=mesh)
+    svc_cont = ElasticityService(
+        max_batch=batch, chunk_iters=chunk_iters, mesh=mesh
+    )
     # Warm: hierarchy build + one compile per (bucket, reset-flag) the
     # workload visits (16, 8, ... as the continuous tail drains).
     svc_gen.solve(make_mixed_tol_requests(n))
@@ -183,12 +212,12 @@ def run_continuous(
         (f"continuous(k={chunk_iters})", runs_cont),
     ):
         # throughput AND latencies from the same (best) repeat
-        t, lat = min(runs, key=lambda r: r[0])
+        t, reports, lat = min(runs, key=lambda r: r[0])
         p50, p95 = _latency_percentiles(lat)
         rows.append(
             {
                 "policy": policy,
-                "scenarios_per_s": n / t,
+                "scenarios_per_s": _real_throughput(reports, t),
                 "t_workload_s": t,
                 "latency_p50_s": p50,
                 "latency_p95_s": p95,
@@ -200,14 +229,14 @@ def run_continuous(
     return rows
 
 
-def run(fast: bool = False, quick: bool = False) -> list[dict]:
+def run(fast: bool = False, quick: bool = False, mesh=None) -> list[dict]:
     batches = [1, 4] if quick else ([1, 4, 16] if fast else [1, 4, 16, 64])
     n_seq = 2 if quick else 4
     repeats = 1 if quick else 3
     rows = [bench_sequential(n_seq)]
     seq_rate = rows[0]["scenarios_per_s"]
     for b in batches:
-        row = bench_batched(b, repeats)
+        row = bench_batched(b, repeats, mesh=mesh)
         row["speedup_vs_sequential"] = row["scenarios_per_s"] / seq_rate
         rows.append(row)
     return rows
@@ -228,13 +257,31 @@ def main() -> None:
     ap.add_argument("--chunk-iters", type=int, default=8,
                     help="PCG iterations per continuous chunk")
     ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard the scenario axis over N devices (forces "
+                         "N virtual host devices on CPU)")
     args = ap.parse_args()
+
+    # Env must be set before anything touches the jax backend.
+    from repro.distributed.sharding import (
+        force_host_device_count,
+        scenario_mesh,
+    )
+
+    force_host_device_count(args.devices)
+    mesh = None
+    if args.devices is not None:
+        mesh = scenario_mesh(args.devices)
+        print(f"scenario mesh: {mesh.devices.size} devices "
+              f"({jax.device_count()} visible)")
+
     if args.continuous:
         rows = run_continuous(
             batch=args.batch,
             n_requests=args.n_requests,
             repeats=args.repeats,
             chunk_iters=args.chunk_iters,
+            mesh=mesh,
         )
         print(
             fmt_table(
@@ -250,24 +297,28 @@ def main() -> None:
                 title=(
                     f"Continuous vs generational batching "
                     f"(mixed tolerances, batch={args.batch}, p={P}, "
-                    f"refine={REFINE}, CPU)"
+                    f"refine={REFINE}, devices={args.devices or 1}, CPU)"
                 ),
             )
         )
         return
-    rows = run(fast=args.fast, quick=args.quick)
+    rows = run(fast=args.fast, quick=args.quick, mesh=mesh)
     print(
         fmt_table(
             rows,
             [
                 "batch",
+                "padded_rows",
                 "scenarios_per_s",
                 "t_generation_s",
                 "t_warm_s",
                 "t_setup_cached_s",
                 "speedup_vs_sequential",
             ],
-            title=f"Batched GMG-PCG throughput (p={P}, refine={REFINE}, CPU)",
+            title=(
+                f"Batched GMG-PCG throughput (p={P}, refine={REFINE}, "
+                f"devices={args.devices or 1}, CPU)"
+            ),
         )
     )
 

@@ -20,6 +20,14 @@ PA kernel — including the Pallas one — runs unchanged on a grid S times
 larger.  ``with_materials`` rebinds the (traceable) material fields
 without redoing any geometry, which is what lets a jitted batched solve
 take materials as runtime arguments.
+
+Multi-device scenarios: with ``shard_mesh`` set (a 1-D jax.sharding
+mesh over the scenario axis), the batched apply/diagonal paths pin both
+the (S, nscalar, 3) L-vectors and the folded (S*nelem, ...) E-vectors
+to axis-0 sharding via with_sharding_constraint.  Because S divides the
+mesh, each shard holds whole scenarios and the element-local kernels
+run unchanged per device with zero cross-device traffic (the L-vector
+gather/scatter indices are per-scenario too).
 """
 
 from __future__ import annotations
@@ -44,6 +52,7 @@ from repro.core.geometry import (
     material_fields,
     quadrature_geometry,
 )
+from repro.distributed.sharding import pin_scenario
 from repro.fem.bc import ConstrainedOperator
 from repro.fem.space import H1Space
 
@@ -73,14 +82,18 @@ class ElasticityOperator:
         dtype=jnp.float64,
         ess_faces=("x0",),
         pallas_interpret: bool = True,
+        shard_mesh=None,
     ):
         if assembly not in ASSEMBLY_LEVELS:
             raise ValueError(f"unknown assembly level {assembly!r}")
+        if shard_mesh is not None and assembly == "fa":
+            raise ValueError("shard_mesh is matrix-free only (not 'fa')")
         self.space = space
         self.assembly = assembly
         self.dtype = dtype
         self.tables = space.tables
         self._pallas_interpret = pallas_interpret
+        self.shard_mesh = shard_mesh
 
         geom = quadrature_geometry(space.mesh, self.tables)
         self.w_detj = jnp.asarray(geom.w_detj, dtype=dtype)  # (Q,Q,Q)
@@ -273,10 +286,20 @@ class ElasticityOperator:
             return y.reshape(x.shape)
         if self.nbatch is not None:
             s, ne = self.nbatch, self.space.nelem
+            x = pin_scenario(x, self.shard_mesh)
             x_e = jax.vmap(self.space.to_evec)(x)  # (S, ne, 3, D, D, D)
-            y_e = self._apply_evec(x_e.reshape((s * ne,) + x_e.shape[2:]))
+            # Pin the folded (S*ne, ...) E-vector: each shard holds whole
+            # scenarios, so the fused PA/Pallas kernel below is purely
+            # shard-local.
+            x_e = pin_scenario(
+                x_e.reshape((s * ne,) + x_e.shape[2:]), self.shard_mesh
+            )
+            y_e = self._apply_evec(x_e)
+            y_e = pin_scenario(y_e, self.shard_mesh)
             y_e = y_e.reshape((s, ne) + y_e.shape[1:])
-            return jax.vmap(self.space.scatter_add)(y_e)
+            return pin_scenario(
+                jax.vmap(self.space.scatter_add)(y_e), self.shard_mesh
+            )
         x_e = self.space.to_evec(x)
         y_e = self._apply_evec(x_e)
         return self.space.scatter_add(y_e)
@@ -298,8 +321,11 @@ class ElasticityOperator:
         d_e = _diag.element_diagonal(self.lam_w, self.mu_w, self.jinv, self.B, self.G)
         if self.nbatch is not None:
             s, ne = self.nbatch, self.space.nelem
+            d_e = pin_scenario(d_e, self.shard_mesh)
             d_e = d_e.reshape((s, ne) + d_e.shape[1:])
-            return jax.vmap(self.space.scatter_add)(d_e)
+            return pin_scenario(
+                jax.vmap(self.space.scatter_add)(d_e), self.shard_mesh
+            )
         return self.space.scatter_add(d_e)
 
     # -- constrained view -------------------------------------------------------

@@ -25,15 +25,27 @@ constraint P(dp, 'model', None) — with scan-over-layers + remat the
 per-layer saved residual is (B, S, d) and at 4k x 64 layers it must not
 be replicated over the model axis (43 GB -> 2.7 GB per device at 32B
 scale).  The forward pass applies it via with_sharding_constraint.
+
+Scenario data parallelism (the solver side): the batched elasticity
+solve (:mod:`repro.solvers.batched`) carries a leading scenario axis S
+with *no cross-scenario coupling* — per-row inner products, per-row
+smoother coefficients, per-row coarse factors.  ``scenario_mesh`` /
+``scenario_spec`` / ``pin_scenario`` / ``device_put_scenario`` give that
+axis a 1-D ``jax.sharding`` mesh: every (S, ...) state/prep array and
+every folded (S*E, ...) element array is sharded on axis 0, the fused PA
+kernels run unchanged per shard, and the only cross-device traffic is
+the (S,)-vector reductions of bpcg's convergence logic.
 """
 
 from __future__ import annotations
 
+import os
 import re
 from typing import Any
 
 import jax
 import numpy as np
+from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 
@@ -59,7 +71,120 @@ __all__ = [
     "batch_pspec",
     "decode_state_pspecs",
     "act_pspec",
+    "SCENARIO_AXIS",
+    "scenario_mesh",
+    "normalize_scenario_mesh",
+    "scenario_spec",
+    "scenario_sharding",
+    "pin_scenario",
+    "device_put_scenario",
+    "force_host_device_count",
 ]
+
+# -- scenario-axis data parallelism (batched elasticity solves) -------------
+
+SCENARIO_AXIS = "scenario"
+
+
+def force_host_device_count(n: int | None) -> None:
+    """Ask XLA for ``n`` virtual host (CPU) devices.
+
+    Must run before the first jax backend touch (any ``jax.devices()`` /
+    array op); appends ``--xla_force_host_platform_device_count`` to
+    XLA_FLAGS unless one is already present, so an operator-set flag
+    always wins.  Centralized here so the CLIs (``--devices N``) and the
+    test suite (``REPRO_HOST_DEVICES``) cannot diverge in how they spell
+    the flag."""
+    if not n or n <= 1:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" in flags:
+        return
+    os.environ["XLA_FLAGS"] = (
+        f"{flags} --xla_force_host_platform_device_count={int(n)}".strip()
+    )
+
+
+def scenario_mesh(n_devices: int | None = None, devices=None) -> Mesh:
+    """A 1-D device mesh over :data:`SCENARIO_AXIS`.
+
+    ``n_devices`` takes the first n of ``jax.devices()`` (all of them
+    when None), so one process forced to 8 host devices can build 1-, 2-,
+    4- and 8-wide meshes for differential testing."""
+    if devices is None:
+        devices = jax.devices()
+        if n_devices is not None:
+            if n_devices < 1:
+                raise ValueError(
+                    f"scenario_mesh needs n_devices >= 1, got {n_devices}"
+                )
+            if n_devices > len(devices):
+                raise ValueError(
+                    f"scenario_mesh({n_devices}) but only "
+                    f"{len(devices)} devices are available"
+                )
+            devices = devices[:n_devices]
+    if len(devices) < 1:
+        raise ValueError("scenario_mesh needs at least one device")
+    return Mesh(np.asarray(devices), (SCENARIO_AXIS,))
+
+
+def normalize_scenario_mesh(mesh) -> tuple[Mesh | None, int]:
+    """(mesh, n_shards) from the ``mesh`` option every scenario-sharded
+    constructor accepts: None (single-device), an int ("first n
+    devices"), or a prebuilt 1-D Mesh.  Shared so `BatchedGMGSolver` and
+    `ElasticityService` can never normalize inconsistently."""
+    if isinstance(mesh, int):
+        mesh = scenario_mesh(mesh)
+    return mesh, (1 if mesh is None else int(mesh.devices.size))
+
+
+def scenario_spec(ndim: int = 1) -> P:
+    """PartitionSpec sharding axis 0 (the scenario axis — or the folded
+    scenario*element axis) of an ndim-dimensional array."""
+    return P(SCENARIO_AXIS, *(None,) * (max(ndim, 1) - 1))
+
+
+def scenario_sharding(mesh: Mesh, ndim: int = 1) -> NamedSharding:
+    return NamedSharding(mesh, scenario_spec(ndim))
+
+
+def pin_scenario(tree: Any, mesh: Mesh | None) -> Any:
+    """with_sharding_constraint every array leaf of ``tree`` onto the
+    scenario mesh along axis 0 (scalars untouched).  No-op when ``mesh``
+    is None, so sharded and unsharded code paths stay one code path."""
+    if mesh is None:
+        return tree
+
+    def pin(x):
+        nd = jnp_ndim(x)
+        if nd == 0:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, scenario_sharding(mesh, nd)
+        )
+
+    return jax.tree.map(pin, tree)
+
+
+def device_put_scenario(tree: Any, mesh: Mesh | None) -> Any:
+    """device_put every array leaf with axis-0 scenario sharding (a no-op
+    for arrays already laid out that way).  Host-side counterpart of
+    :func:`pin_scenario` for feeding jitted entry points."""
+    if mesh is None:
+        return tree
+
+    def put(x):
+        nd = jnp_ndim(x)
+        if nd == 0:
+            return x
+        return jax.device_put(x, scenario_sharding(mesh, nd))
+
+    return jax.tree.map(put, tree)
+
+
+def jnp_ndim(x) -> int:
+    return getattr(x, "ndim", np.ndim(x))
 
 # (regex over the tree path, trailing-dims sharding) — first match wins.
 # The tuple addresses the *last* len(tuple) dims of the leaf; leading dims

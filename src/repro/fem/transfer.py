@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.basis import gll_nodes, lagrange_tables
+from repro.distributed.sharding import pin_scenario
 from repro.fem.space import H1Space
 
 __all__ = ["Transfer", "h_transfer_1d", "p_transfer_1d", "make_transfer"]
@@ -58,6 +59,11 @@ class Transfer:
     Both directions accept an optional leading scenario-batch axis:
     (nscalar, 3) or (S, nscalar, 3) — the 1D contractions are written
     with einsum ellipses, so a batched V-cycle threads through unchanged.
+
+    ``shard_mesh`` (a scenario-axis device mesh) pins batched outputs to
+    axis-0 sharding: the 1D contractions touch only trailing axes, so
+    prolongation/restriction of a sharded batch is purely shard-local
+    and the V-cycle never materializes a replicated (S, ...) residual.
     """
 
     px: Any  # (Nx_f, Nx_c)
@@ -65,6 +71,12 @@ class Transfer:
     pz: Any
     grid_c: tuple[int, int, int]
     grid_f: tuple[int, int, int]
+    shard_mesh: Any = None
+
+    def _pin(self, u):
+        if u.ndim < 3:  # unbatched (nscalar, 3): nothing to shard
+            return u
+        return pin_scenario(u, self.shard_mesh)
 
     def prolong(self, u_c):
         """(..., nscalar_c, 3) -> (..., nscalar_f, 3)."""
@@ -74,7 +86,7 @@ class Transfer:
         u = jnp.einsum("...zyxc,Xx->...zyXc", u, self.px)
         u = jnp.einsum("...zyXc,Yy->...zYXc", u, self.py)
         u = jnp.einsum("...zYXc,Zz->...ZYXc", u, self.pz)
-        return u.reshape(lead + (-1, 3))
+        return self._pin(u.reshape(lead + (-1, 3)))
 
     def restrict(self, r_f):
         """Transpose: (..., nscalar_f, 3) -> (..., nscalar_c, 3)."""
@@ -84,10 +96,12 @@ class Transfer:
         r = jnp.einsum("...ZYXc,Zz->...zYXc", r, self.pz)
         r = jnp.einsum("...zYXc,Yy->...zyXc", r, self.py)
         r = jnp.einsum("...zyXc,Xx->...zyxc", r, self.px)
-        return r.reshape(lead + (-1, 3))
+        return self._pin(r.reshape(lead + (-1, 3)))
 
 
-def make_transfer(coarse: H1Space, fine: H1Space, dtype=jnp.float64) -> Transfer:
+def make_transfer(
+    coarse: H1Space, fine: H1Space, dtype=jnp.float64, shard_mesh=None
+) -> Transfer:
     """Build the transfer between two nested spaces: either an h-refinement
     at equal degree or a p-embedding on the same mesh."""
     mc, mf = coarse.mesh, fine.mesh
@@ -103,5 +117,6 @@ def make_transfer(coarse: H1Space, fine: H1Space, dtype=jnp.float64) -> Transfer
         )
     px, py, pz = (jnp.asarray(m, dtype=dtype) for m in mats)
     return Transfer(
-        px=px, py=py, pz=pz, grid_c=coarse.node_grid, grid_f=fine.node_grid
+        px=px, py=py, pz=pz, grid_c=coarse.node_grid, grid_f=fine.node_grid,
+        shard_mesh=shard_mesh,
     )

@@ -10,6 +10,13 @@ Usage:
         --n-requests 16 --max-batch 8 --p 2 --refine 1
     PYTHONPATH=src python -m repro.launch.serve_solve --p 1 2  # mixed keys
     PYTHONPATH=src python -m repro.launch.serve_solve --continuous
+    PYTHONPATH=src python -m repro.launch.serve_solve --devices 4  # sharded
+
+``--devices N`` shards the scenario axis of every compiled solver over N
+devices.  On a CPU-only host it forces N virtual XLA host devices
+(``--xla_force_host_platform_device_count``), which MUST happen before
+jax initializes its backend — hence the heavyweight imports live inside
+``main``.
 """
 
 from __future__ import annotations
@@ -21,17 +28,12 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
-from repro.serve.elasticity_service import (  # noqa: E402
-    ElasticityService,
-    SolveRequest,
-)
 
-
-def make_workload(
-    n_requests: int, ps: list[int], refine: int, base_tol: float
-) -> list[SolveRequest]:
+def make_workload(n_requests: int, ps: list[int], refine: int, base_tol: float):
     """A deterministic mixed workload: alternating material contrasts,
     traction directions/magnitudes and tolerances across ``ps``."""
+    from repro.serve.elasticity_service import SolveRequest
+
     reqs = []
     for i in range(n_requests):
         stiff = 50.0 + 10.0 * (i % 3)
@@ -65,11 +67,29 @@ def main() -> None:
                          "padding) instead of generational")
     ap.add_argument("--chunk-iters", type=int, default=8,
                     help="PCG iterations per continuous chunk")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard the scenario axis over N devices (forces "
+                         "N virtual host devices on CPU)")
     args = ap.parse_args()
+
+    # Env must be set before anything touches the jax backend.
+    from repro.distributed.sharding import (
+        force_host_device_count,
+        scenario_mesh,
+    )
+
+    force_host_device_count(args.devices)
+    from repro.serve.elasticity_service import ElasticityService
+
+    mesh = None
+    if args.devices is not None:
+        mesh = scenario_mesh(args.devices)
+        print(f"scenario mesh: {mesh.devices.size} devices "
+              f"({jax.device_count()} visible)")
 
     service = ElasticityService(
         max_batch=args.max_batch, assembly=args.assembly,
-        chunk_iters=args.chunk_iters,
+        chunk_iters=args.chunk_iters, mesh=mesh,
     )
     for round_i in range(args.repeat):
         reqs = make_workload(
@@ -81,22 +101,26 @@ def main() -> None:
         else:
             reports = service.solve(reqs)
         dt = time.perf_counter() - t0
+        # Throughput counts REAL requests only — padding rows (bucket or
+        # device alignment) ride in padded_rows and are excluded.
         print(
             f"-- round {round_i}: {len(reports)} scenarios in {dt:.2f}s "
             f"({len(reports) / dt:.2f} scenarios/s)"
         )
         print(
             f"{'i':>3} {'key':16s} {'ndof':>7} {'iters':>5} {'conv':>5} "
-            f"{'rel_norm':>9} {'hit':>4} {'setup(s)':>8} {'solve(s)':>8}"
+            f"{'rel_norm':>9} {'hit':>4} {'rows':>7} {'setup(s)':>8} "
+            f"{'solve(s)':>8}"
         )
         for i, rep in enumerate(reports):
             p, refine, shape = rep.key[:3]
             short_key = f"p{p}/r{refine}/{'x'.join(map(str, shape))}"
+            rows = f"{rep.batch_size}/{rep.padded_rows}"
             print(
                 f"{i:>3} {short_key:16s} {rep.ndof:>7} "
                 f"{rep.iterations:>5} {str(rep.converged):>5} "
                 f"{rep.final_rel_norm:>9.2e} {str(rep.cache_hit):>4} "
-                f"{rep.t_setup:>8.3f} {rep.t_solve:>8.3f}"
+                f"{rows:>7} {rep.t_setup:>8.3f} {rep.t_solve:>8.3f}"
             )
     print(f"service stats: {service.stats}")
 

@@ -38,7 +38,16 @@ Shared machinery:
   requests are flagged ``born_converged`` so they can't be mistaken
   for a padded slot;
 * every request gets a per-request :class:`SolveReport` with its own
-  iteration count, convergence flag and residual norm.
+  iteration count, convergence flag and residual norm;
+* **scenario sharding**: with ``mesh`` set (a 1-D jax.sharding mesh over
+  the scenario axis, or an int = "first n devices"), every compiled
+  solver shards the batch rows across devices.  Buckets are rounded up
+  to a multiple of the device count with born-converged padding rows, so
+  the host-side retire/refill logic runs unchanged — ``step()`` fetches
+  the (S,) convergence vectors of a sharded state exactly as before
+  (jax gathers them transparently), and device-padding rows are never
+  surfaced.  ``SolveReport.padded_rows`` records the compiled program's
+  total row count so throughput accounting can exclude padding.
 """
 
 from __future__ import annotations
@@ -95,6 +104,11 @@ class SolveReport:
     t_setup: float  # seconds building the solver program (0 on cache hit)
     t_solve: float  # see class docstring
     born_converged: bool = False  # zero RHS: converged before iteration 1
+    # Total rows of the compiled program this request rode in, INCLUDING
+    # bucket/device padding (batch_size counts only real requests).
+    # Honest throughput math divides real requests — never padded_rows —
+    # by wall-clock.
+    padded_rows: int = 0
     x: Any = None
 
 
@@ -153,6 +167,7 @@ class ElasticityService:
         maxiter: int = 200,
         pallas_interpret: bool = True,
         chunk_iters: int = 8,
+        mesh=None,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
@@ -167,6 +182,11 @@ class ElasticityService:
         self.maxiter = maxiter
         self.pallas_interpret = pallas_interpret
         self.chunk_iters = chunk_iters
+        # Scenario-axis device mesh shared by every solver this service
+        # builds (int = "first n devices"); see repro.distributed.sharding.
+        from repro.distributed.sharding import normalize_scenario_mesh
+
+        self.mesh, self.n_shards = normalize_scenario_mesh(mesh)
         self._solvers: OrderedDict[tuple, BatchedGMGSolver] = OrderedDict()
         self._queue: list[tuple[int, SolveRequest]] = []
         self._flights: dict[tuple, _Flight] = {}
@@ -225,11 +245,16 @@ class ElasticityService:
         return ticket
 
     def bucket_for(self, n: int) -> int:
-        """Smallest padding bucket (1/2/4/.../max_batch) holding n rows."""
+        """Smallest padding bucket (1/2/4/.../max_batch) holding n rows,
+        rounded up to a multiple of the scenario-mesh device count (the
+        sharded axis must divide the mesh; the extra rows are
+        born-converged padding and are never surfaced)."""
         b = 1
         while b < n and b < self.max_batch:
             b *= 2
-        return min(b, self.max_batch)
+        b = min(b, self.max_batch)
+        m = self.n_shards
+        return -(-b // m) * m
 
     # -- cache ---------------------------------------------------------------
     def _solver_for(self, key: tuple, req: SolveRequest):
@@ -239,15 +264,16 @@ class ElasticityService:
             self.stats["cache_hits"] += 1
             return self._solvers[key], True, 0.0
         t0 = time.perf_counter()
-        mesh = req.coarse_mesh if req.coarse_mesh is not None else beam_hex()
+        cmesh = req.coarse_mesh if req.coarse_mesh is not None else beam_hex()
         solver = BatchedGMGSolver(
-            mesh,
+            cmesh,
             req.refine,
             req.p,
             assembly=self.assembly,
             dtype=self.dtype,
             maxiter=self.maxiter,
             pallas_interpret=self.pallas_interpret,
+            mesh=self.mesh,
         )
         self._solvers[key] = solver
         self.stats["cache_misses"] += 1
@@ -373,6 +399,7 @@ class ElasticityService:
                 born_converged=bool(
                     iters[i] == 0 and converged and nom0[i] == 0
                 ),
+                padded_rows=flight.bucket,
                 x=np.asarray(flight.state.x[i])
                 if req.keep_solution
                 else None,
@@ -573,22 +600,18 @@ class ElasticityService:
     ) -> list[SolveReport]:
         reqs = [r for _, r in chunk]
         n_real = len(reqs)
-        # Bucketed padding: the smallest sufficient bucket, not max_batch,
-        # so short generations reuse a cheaper compiled program.
+        # Bucketed padding: the smallest sufficient (device-aligned)
+        # bucket, not max_batch, so short generations reuse a cheaper
+        # compiled program.  The padding rows themselves (first row's
+        # materials, zero traction -> born converged) come from the one
+        # shared convention in BatchedGMGSolver.pad_scenarios.
         n_pad = self.bucket_for(n_real) - n_real
-
-        materials = [r.materials or MATERIALS_BEAM for r in reqs]
-        tractions = np.asarray([r.traction for r in reqs], dtype=np.float64)
-        rel_tols = np.asarray([r.rel_tol for r in reqs], dtype=np.float64)
-        if n_pad > 0:
-            # Padding rows reuse the first scenario's materials (keeps the
-            # batched operators SPD) with a zero traction: b == 0 makes
-            # them born-converged, so they cost 0 bpcg iterations.
-            materials += [materials[0]] * n_pad
-            tractions = np.concatenate(
-                [tractions, np.zeros((n_pad, 3))], axis=0
-            )
-            rel_tols = np.concatenate([rel_tols, np.full(n_pad, 1e-6)])
+        materials, tractions, rel_tols, _ = solver.pad_scenarios(
+            [r.materials or MATERIALS_BEAM for r in reqs],
+            [r.traction for r in reqs],
+            [r.rel_tol for r in reqs],
+            n=n_real + n_pad,
+        )
 
         t0 = time.perf_counter()
         res = solver.solve(materials, tractions, rel_tols)
@@ -619,6 +642,7 @@ class ElasticityService:
                     t_setup=t_setup,
                     t_solve=t_solve,
                     born_converged=bool(iters[s] == 0 and conv[s] and ini[s] == 0),
+                    padded_rows=n_real + n_pad,
                     x=np.asarray(x[s]) if req.keep_solution else None,
                 )
             )

@@ -43,6 +43,20 @@ The scenario axis is threaded through ``ChebyshevSmoother``,
 ``GMGPreconditioner`` and ``Transfer``; operators fold it into the
 element axis so the fused PA kernels (including Pallas) run unchanged
 on an S-times-larger grid.
+
+Multi-device sharding: ``BatchedGMGSolver(..., mesh=...)`` (a 1-D
+``jax.sharding`` mesh over the scenario axis, or an int meaning "the
+first n devices") shards the scenario axis S across devices end to
+end — the :class:`BpcgState` pytree, the prep pytree (weighted material
+fields, smoother dinv/lambda_max, coarse Cholesky factors) and the
+operators' folded (S*E, ...) element arrays all carry axis-0
+``NamedSharding``.  Scenarios never couple, so each device runs the
+exact single-device program on its own rows; the only cross-device
+traffic is the (S,)-vector convergence logic of ``bpcg`` (cheap
+all-gathers).  ``solve`` pads S up to a multiple of the device count
+with born-converged rows (zero traction) and slices them back off, so
+sharding is a pure implementation detail: results, iteration counts and
+convergence flags are identical to the single-device path.
 """
 
 from __future__ import annotations
@@ -55,6 +69,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.operators import DEFER_MATERIALS, ElasticityOperator
+from repro.distributed.sharding import (
+    device_put_scenario,
+    normalize_scenario_mesh,
+    pin_scenario,
+)
 from repro.fem.mesh import HexMesh
 from repro.fem.space import H1Space
 from repro.fem.transfer import make_transfer
@@ -300,6 +319,7 @@ class BatchedGMGSolver:
         traction_face: str = "x1",
         maxiter: int = 200,
         pallas_interpret: bool = True,
+        mesh=None,
     ):
         if assembly == "fa":
             raise ValueError("batched solves are matrix-free ('fa' unsupported)")
@@ -311,6 +331,9 @@ class BatchedGMGSolver:
         self.cheb_degree = cheb_degree
         self.power_iters = power_iters
         self.maxiter = maxiter
+        # Scenario-axis device mesh (None = single-device).  An int is
+        # shorthand for "shard over the first n devices".
+        self.mesh, self.n_shards = normalize_scenario_mesh(mesh)
 
         spaces = hierarchy_spaces(coarse_mesh, n_h_refine, p_target)
         self.spaces = spaces
@@ -335,6 +358,7 @@ class BatchedGMGSolver:
                 dtype=dtype,
                 ess_faces=ess_faces,
                 pallas_interpret=pallas_interpret,
+                shard_mesh=self.mesh,
             )
             self._base_ops.append(op)
             self._attr_idx.append(
@@ -345,7 +369,9 @@ class BatchedGMGSolver:
             )
 
         self.transfers = [
-            make_transfer(spaces[i], spaces[i + 1], dtype=dtype)
+            make_transfer(
+                spaces[i], spaces[i + 1], dtype=dtype, shard_mesh=self.mesh
+            )
             for i in range(len(spaces) - 1)
         ]
         # traction_rhs is linear in the traction vector and separable:
@@ -366,6 +392,54 @@ class BatchedGMGSolver:
     def fine_space(self) -> H1Space:
         return self.spaces[-1]
 
+    # -- sharding ------------------------------------------------------------
+    def pad_batch(self, n: int) -> int:
+        """Rows a batch of ``n`` scenarios must be padded to so the
+        scenario axis divides the device mesh (n unchanged when
+        single-device)."""
+        m = self.n_shards
+        return -(-n // m) * m
+
+    def pad_scenarios(self, materials, tractions, rel_tol, n: int | None = None):
+        """Pad a scenario batch to ``n`` rows (default: the device-aligned
+        ``pad_batch`` size) with born-converged padding rows: the first
+        scenario's materials — keeps the batched operators SPD — and a
+        zero traction, so b == 0 makes them free (0 iterations).  The ONE
+        definition of the padding-row convention; the service and the
+        differential tests both go through it.  Returns
+        ``(materials, tractions, rel_tols, n_real)`` with rel_tols
+        broadcast to a per-row array."""
+        s = len(materials)
+        if n is None:
+            n = self.pad_batch(s)
+        tractions = np.asarray(tractions, dtype=np.float64)
+        rel = np.broadcast_to(
+            np.asarray(rel_tol, dtype=np.float64), (s,)
+        ).copy()
+        if n > s:
+            materials = list(materials) + [materials[0]] * (n - s)
+            tractions = np.concatenate(
+                [tractions, np.zeros((n - s, 3))], axis=0
+            )
+            rel = np.concatenate([rel, np.full((n - s,), 1e-6)])
+        return materials, tractions, rel, s
+
+    def _check_batch(self, s: int, what: str) -> None:
+        if s % self.n_shards:
+            raise ValueError(
+                f"{what}: batch size {s} does not divide the "
+                f"{self.n_shards}-device scenario mesh; pad to "
+                f"pad_batch({s}) = {self.pad_batch(s)} born-converged rows"
+            )
+
+    def _pin(self, tree):
+        """with_sharding_constraint (traced): axis-0 scenario sharding."""
+        return pin_scenario(tree, self.mesh)
+
+    def _put(self, tree):
+        """device_put (host-side): axis-0 scenario sharding."""
+        return device_put_scenario(tree, self.mesh)
+
     # -- prep pytree ---------------------------------------------------------
     # prep carries every per-scenario derived quantity the step program
     # needs, as plain arrays: the operators' weighted material fields per
@@ -375,9 +449,11 @@ class BatchedGMGSolver:
     # chunks pay neither power iterations nor refactorization.
 
     def empty_prep(self, s: int) -> dict:
-        """Zero-filled prep of the right shapes for an S-row batch.  Only
-        meaningful as the ``prep`` argument of a ``prepare`` call whose
-        reset mask covers every row that will ever be read."""
+        """Zero-filled prep of the right shapes for an S-row batch (laid
+        out over the scenario mesh when sharded).  Only meaningful as the
+        ``prep`` argument of a ``prepare`` call whose reset mask covers
+        every row that will ever be read."""
+        self._check_batch(s, "empty_prep")
         lam_w, mu_w, dinv, lmax = [], [], [], []
         for i, (base, sp) in enumerate(zip(self._base_ops, self.spaces)):
             shape = (s * sp.nelem,) + base.w_detj.shape
@@ -389,37 +465,46 @@ class BatchedGMGSolver:
                 )
                 lmax.append(np.zeros((s,), dtype=np.dtype(self.dtype)))
         n0 = self.spaces[0].nscalar * 3
-        return {
-            "lam_w": tuple(lam_w),
-            "mu_w": tuple(mu_w),
-            "dinv": tuple(dinv),
-            "lmax": tuple(lmax),
-            "chol": np.zeros((s, n0, n0), dtype=np.dtype(self.dtype)),
-        }
+        return self._put(
+            {
+                "lam_w": tuple(lam_w),
+                "mu_w": tuple(mu_w),
+                "dinv": tuple(dinv),
+                "lmax": tuple(lmax),
+                "chol": np.zeros((s, n0, n0), dtype=np.dtype(self.dtype)),
+            }
+        )
 
     def empty_state(self, s: int) -> BpcgState:
         """All-rows-retired state of the right shapes for an S-row batch
-        (every row must be reset before its first chunk)."""
+        (every row must be reset before its first chunk; laid out over
+        the scenario mesh when sharded)."""
+        self._check_batch(s, "empty_state")
         vec = np.zeros((s, self.fine_space.nscalar, 3), dtype=np.dtype(self.dtype))
         row = np.zeros((s,), dtype=np.dtype(self.dtype))
-        return BpcgState(
-            x=vec,
-            r=vec,
-            z=vec,
-            d=vec,
-            nom=row,
-            nom0=row,
-            threshold=row,
-            iters=np.zeros((s,), dtype=np.int32),
-            active=np.zeros((s,), dtype=bool),
+        return self._put(
+            BpcgState(
+                x=vec,
+                r=vec,
+                z=vec,
+                d=vec,
+                nom=row,
+                nom0=row,
+                threshold=row,
+                iters=np.zeros((s,), dtype=np.int32),
+                active=np.zeros((s,), dtype=bool),
+            )
         )
 
     def take_rows(self, state: BpcgState, prep: dict, rows):
         """Gather batch rows (host-side re-bucketing): returns (state,
         prep) whose row i is the old row ``rows[i]``.  ``rows`` may
         repeat indices (placeholder rows that the caller is about to
-        reset) and may be shorter or longer than the old batch."""
+        reset) and may be shorter or longer than the old batch.  The
+        result is re-laid-out over the scenario mesh (a re-bucketing
+        changes which device owns which row)."""
         rows = np.asarray(rows, dtype=np.int32)
+        self._check_batch(len(rows), "take_rows")
         new_state = BpcgState(
             **{
                 fld.name: jnp.asarray(getattr(state, fld.name))[rows]
@@ -445,7 +530,7 @@ class BatchedGMGSolver:
             "lmax": tuple(jnp.asarray(l)[rows] for l in prep["lmax"]),
             "chol": jnp.asarray(prep["chol"])[rows],
         }
-        return new_state, new_prep
+        return self._put(new_state), self._put(new_prep)
 
     def copy_prep_rows(self, prep: dict, src, dst) -> dict:
         """Duplicate prepared batch rows: row ``dst[i]`` takes row
@@ -467,19 +552,21 @@ class BatchedGMGSolver:
             a = jnp.asarray(a)
             return a.at[dst].set(a[src])
 
-        return {
-            "lam_w": tuple(
-                fold_copy(w, sp.nelem)
-                for w, sp in zip(prep["lam_w"], self.spaces)
-            ),
-            "mu_w": tuple(
-                fold_copy(w, sp.nelem)
-                for w, sp in zip(prep["mu_w"], self.spaces)
-            ),
-            "dinv": tuple(row_copy(d) for d in prep["dinv"]),
-            "lmax": tuple(row_copy(l) for l in prep["lmax"]),
-            "chol": row_copy(prep["chol"]),
-        }
+        return self._put(
+            {
+                "lam_w": tuple(
+                    fold_copy(w, sp.nelem)
+                    for w, sp in zip(prep["lam_w"], self.spaces)
+                ),
+                "mu_w": tuple(
+                    fold_copy(w, sp.nelem)
+                    for w, sp in zip(prep["mu_w"], self.spaces)
+                ),
+                "dinv": tuple(row_copy(d) for d in prep["dinv"]),
+                "lmax": tuple(row_copy(l) for l in prep["lmax"]),
+                "chol": row_copy(prep["chol"]),
+            }
+        )
 
     # -- traced bodies -------------------------------------------------------
     def _prepare_body(self, lam_vals, mu_vals, reset_mask, prep) -> dict:
@@ -488,6 +575,9 @@ class BatchedGMGSolver:
         per-scenario data (smoother dinv/lambda_max, coarse Cholesky) for
         exactly those rows; unmasked rows keep their prep bitwise."""
         s = lam_vals.shape[0]
+        lam_vals, mu_vals, reset_mask, prep = self._pin(
+            (lam_vals, mu_vals, reset_mask, prep)
+        )
         lam_w, mu_w, dinv, lmax = [], [], [], []
         chol = None
         for i, (base, idx) in enumerate(zip(self._base_ops, self._attr_idx)):
@@ -498,14 +588,16 @@ class BatchedGMGSolver:
             op = prev.with_materials_rows(
                 lam_vals[:, idx], mu_vals[:, idx], reset_mask
             )
-            lam_w.append(op.lam_w)
-            mu_w.append(op.mu_w)
+            lam_w.append(self._pin(op.lam_w))
+            mu_w.append(self._pin(op.mu_w))
             cop = op.constrained()
             if i == 0:
-                K = probe_coarse_matrix(cop, sp.nscalar, s, self.dtype)
+                K = probe_coarse_matrix(
+                    cop, sp.nscalar, s, self.dtype, shard_mesh=self.mesh
+                )
                 L = jnp.linalg.cholesky(K)
-                chol = jnp.where(
-                    reset_mask[:, None, None], L, prep["chol"]
+                chol = self._pin(
+                    jnp.where(reset_mask[:, None, None], L, prep["chol"])
                 )
             else:
                 sm = ChebyshevSmoother.setup(
@@ -516,14 +608,21 @@ class BatchedGMGSolver:
                     degree=self.cheb_degree,
                     power_iters=self.power_iters,
                     batch_dims=1,
+                    shard_mesh=self.mesh,
                 )
                 dinv.append(
-                    jnp.where(
-                        reset_mask[:, None, None], sm.dinv, prep["dinv"][i - 1]
+                    self._pin(
+                        jnp.where(
+                            reset_mask[:, None, None],
+                            sm.dinv,
+                            prep["dinv"][i - 1],
+                        )
                     )
                 )
                 lmax.append(
-                    jnp.where(reset_mask, sm.lmax, prep["lmax"][i - 1])
+                    self._pin(
+                        jnp.where(reset_mask, sm.lmax, prep["lmax"][i - 1])
+                    )
                 )
         return {
             "lam_w": tuple(lam_w),
@@ -565,13 +664,15 @@ class BatchedGMGSolver:
         gmg = GMGPreconditioner(
             levels=levels,
             transfers=self.transfers,
-            coarse_solve=cholesky_solver(prep["chol"]),
+            coarse_solve=cholesky_solver(prep["chol"], shard_mesh=self.mesh),
         )
         return levels, gmg
 
     def _rhs(self, tractions):
         b = self._traction_pattern[None, :, None] * tractions[:, None, :]
-        return jnp.where(self._fine_ess, 0.0, b)  # homogeneous elimination
+        return self._pin(
+            jnp.where(self._fine_ess, 0.0, b)  # homogeneous elimination
+        )
 
     def _prepare_impl(self, lam_vals, mu_vals, reset_mask, prep) -> dict:
         return self._prepare_body(lam_vals, mu_vals, reset_mask, prep)
@@ -580,13 +681,14 @@ class BatchedGMGSolver:
         self, tractions, rel_tol, reset_mask, state, prep, k_iters,
         *, do_reset: bool,
     ) -> BpcgState:
+        state, prep = self._pin(state), self._pin(prep)
         levels, gmg = self._build_from_prep(prep)
         A = levels[-1].constrained
         if do_reset:
             fresh = bpcg_init(A, self._rhs(tractions), M=gmg, rel_tol=rel_tol)
             state = merge_states(reset_mask, fresh, state)
-        return bpcg_chunk(
-            A, state, M=gmg, k_iters=k_iters, maxiter=self.maxiter
+        return self._pin(
+            bpcg_chunk(A, state, M=gmg, k_iters=k_iters, maxiter=self.maxiter)
         )
 
     def _solve_impl(self, lam_vals, mu_vals, tractions, rel_tol):
@@ -598,7 +700,7 @@ class BatchedGMGSolver:
         A = levels[-1].constrained
         state = bpcg_init(A, self._rhs(tractions), M=gmg, rel_tol=rel_tol)
         state = bpcg_chunk(A, state, M=gmg, k_iters=None, maxiter=self.maxiter)
-        return bpcg_result(state)
+        return bpcg_result(self._pin(state))
 
     # -- public entry --------------------------------------------------------
     def pack_materials(self, materials: list[dict]) -> tuple[Any, Any]:
@@ -621,6 +723,10 @@ class BatchedGMGSolver:
         """Jitted: fold the masked rows' new materials into the per-row
         operator fields and refresh their derived data (see
         ``_prepare_body``).  One trace per batch size."""
+        self._check_batch(int(np.shape(lam_vals)[0]), "prepare")
+        lam_vals, mu_vals, reset_mask, prep = self._put(
+            (lam_vals, mu_vals, reset_mask, prep)
+        )
         return self._jit_prepare(lam_vals, mu_vals, reset_mask, prep)
 
     def run_chunk(
@@ -633,8 +739,12 @@ class BatchedGMGSolver:
         iteration count 0.  ``k_iters`` is a runtime argument — any chunk
         length reuses the same compiled program."""
         tractions = jnp.asarray(tractions, self.dtype)
+        self._check_batch(int(tractions.shape[0]), "run_chunk")
         rel = jnp.broadcast_to(
             jnp.asarray(rel_tol, self.dtype), (tractions.shape[0],)
+        )
+        tractions, rel, reset_mask, state, prep = self._put(
+            (tractions, rel, reset_mask, state, prep)
         )
         return self._jit_chunk(
             tractions, rel, reset_mask, state, prep,
@@ -652,10 +762,26 @@ class BatchedGMGSolver:
         materials: length-S list of attribute->(lambda, mu) dicts
         tractions: (S, 3) traction vectors on the traction face
         rel_tol:   scalar or (S,) per-scenario relative tolerances
+
+        Sharded solvers pad S up to a multiple of the device count with
+        born-converged rows (see :meth:`pad_scenarios`) and slice them
+        off the result: callers see exactly the S rows they asked for.
         """
+        materials, tractions, rel_tol, s = self.pad_scenarios(
+            materials, tractions, rel_tol
+        )
         lam_vals, mu_vals = self.pack_materials(materials)
         tractions = jnp.asarray(tractions, self.dtype)
-        rel = jnp.broadcast_to(
-            jnp.asarray(rel_tol, self.dtype), (len(materials),)
+        rel = jnp.asarray(rel_tol, self.dtype)
+        lam_vals, mu_vals, tractions, rel = self._put(
+            (lam_vals, mu_vals, tractions, rel)
         )
-        return self._jit_solve(lam_vals, mu_vals, tractions, rel)
+        res = self._jit_solve(lam_vals, mu_vals, tractions, rel)
+        if len(materials) > s:
+            res = BPCGResult(
+                **{
+                    fld.name: getattr(res, fld.name)[:s]
+                    for fld in dataclasses.fields(BPCGResult)
+                }
+            )
+        return res

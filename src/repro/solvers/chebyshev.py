@@ -23,6 +23,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.sharding import pin_scenario
+
 __all__ = ["ChebyshevSmoother", "power_iteration_lmax"]
 
 
@@ -34,7 +36,8 @@ def _expand(a, ndim: int):
 
 
 def power_iteration_lmax(
-    A: Callable, dinv, shape, dtype, iters: int = 10, batch_dims: int = 0
+    A: Callable, dinv, shape, dtype, iters: int = 10, batch_dims: int = 0,
+    shard_mesh=None,
 ):
     """Estimate lambda_max(D^{-1} A) with deterministic power iterations.
 
@@ -43,10 +46,17 @@ def power_iteration_lmax(
     and the estimate has shape ``shape[:batch_dims]``.  The start vector
     is drawn at the per-scenario shape and broadcast, so each batched row
     runs exactly the iteration its scalar counterpart would.
+
+    ``shard_mesh`` (a scenario-axis device mesh) pins the broadcast start
+    vector to axis-0 sharding, keeping the whole iteration shard-local:
+    the per-row norms/Rayleigh quotients reduce within a shard, so the
+    estimate is bitwise the single-device one.
     """
     key = jax.random.PRNGKey(1234)
     v = jax.random.normal(key, shape[batch_dims:], dtype=dtype)
     v = jnp.broadcast_to(v, shape)
+    if batch_dims:  # axis 0 is the scenario batch
+        v = pin_scenario(v, shard_mesh)
     axes = tuple(range(batch_dims, v.ndim))
 
     def body(_, carry):
@@ -79,10 +89,11 @@ class ChebyshevSmoother:
 
     @classmethod
     def setup(cls, A, diagonal, shape, dtype, degree=2, power_iters=10,
-              batch_dims=0):
+              batch_dims=0, shard_mesh=None):
         dinv = 1.0 / diagonal
         lmax = power_iteration_lmax(
-            A, dinv, shape, dtype, power_iters, batch_dims=batch_dims
+            A, dinv, shape, dtype, power_iters, batch_dims=batch_dims,
+            shard_mesh=shard_mesh,
         )
         return cls(A=A, dinv=dinv, lmax=lmax, degree=degree)
 

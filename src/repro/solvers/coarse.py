@@ -26,6 +26,7 @@ import scipy.linalg as sla
 
 from repro.core.fa import SparseMatrix, assemble_sparse
 from repro.core.operators import ElasticityOperator
+from repro.distributed.sharding import pin_scenario
 from repro.solvers.cg import pcg
 
 __all__ = [
@@ -36,32 +37,39 @@ __all__ = [
 ]
 
 
-def probe_coarse_matrix(cop, nscalar: int, nbatch: int, dtype):
+def probe_coarse_matrix(cop, nscalar: int, nbatch: int, dtype, shard_mesh=None):
     """Densify a scenario-batched constrained coarse operator by probing
     it with identity columns: returns the (S, n, n) stack of per-scenario
     coarse matrices (n = nscalar * 3).  Pure jax, so it traces — a jitted
     batched solve can take per-scenario materials as runtime arguments
-    and still assemble its coarse level inside the same device program."""
+    and still assemble its coarse level inside the same device program.
+
+    ``shard_mesh`` pins each broadcast probe vector (and the resulting
+    matrix stack) to scenario-axis sharding, so every device probes only
+    its own scenarios' coarse matrices."""
     n = nscalar * 3
 
     def col(e):
         xb = jnp.broadcast_to(e.reshape(nscalar, 3), (nbatch, nscalar, 3))
+        xb = pin_scenario(xb, shard_mesh)
         return cop(xb).reshape(nbatch, n)
 
     cols = jax.vmap(col)(jnp.eye(n, dtype=dtype))  # (n_j, S, n_i)
-    return jnp.moveaxis(cols, 0, -1)  # (S, i, j)
+    return pin_scenario(jnp.moveaxis(cols, 0, -1), shard_mesh)  # (S, i, j)
 
 
-def cholesky_solver(L) -> Callable:
+def cholesky_solver(L, shard_mesh=None) -> Callable:
     """solve(b) from a prefactorized batched lower-Cholesky stack
     (S, n, n).  The factor is plain array data, so the resumable batched
-    solve can carry it across chunk boundaries in its prep pytree."""
+    solve can carry it across chunk boundaries in its prep pytree.
+    ``shard_mesh`` pins the per-scenario triangular solves shard-local
+    (each device factors-solves only its own scenarios)."""
 
     def solve(b):
         nbatch, n = L.shape[0], L.shape[1]
-        flat = b.reshape(nbatch, n)
+        flat = pin_scenario(b.reshape(nbatch, n), shard_mesh)
         x = jax.vmap(lambda Ls, bs: jsl.cho_solve((Ls, True), bs))(L, flat)
-        return x.reshape(b.shape)
+        return pin_scenario(x, shard_mesh).reshape(b.shape)
 
     return solve
 

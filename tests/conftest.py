@@ -1,17 +1,50 @@
 """Shared test configuration.
 
+Device-count policy, centralized so the default and multidevice CI
+lanes cannot silently diverge:
+
+* By default NO virtual device count is forced — smoke tests and
+  benches see the real single device; only launch/dryrun.py fakes 512.
+* ``REPRO_HOST_DEVICES=N`` (the multidevice lane sets 8) forces N
+  virtual XLA host devices through the same
+  ``force_host_device_count`` helper the ``--devices`` CLIs use.  It
+  must be applied before jax initializes its backend, hence before the
+  ``import jax`` below.
+* Tests marked ``multidevice`` are auto-skipped when only one device is
+  visible, so the default lane collects them harmlessly and the
+  multidevice lane (`-m multidevice`) runs them all.
+
 x64 is enabled globally: the FEM oracle comparisons need f64 tightness
 (the paper's CPU arithmetic is double precision); LM-model tests pass
-explicit f32 dtypes and are unaffected.  NOTE: no
-xla_force_host_platform_device_count here — smoke tests and benches see
-the real single device; only launch/dryrun.py fakes 512.
+explicit f32 dtypes and are unaffected.
 """
 
-import jax
-import numpy as np
-import pytest
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+
+from repro.distributed.sharding import force_host_device_count  # noqa: E402
+
+force_host_device_count(int(os.environ.get("REPRO_HOST_DEVICES", "0") or 0))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", True)
+
+
+def pytest_collection_modifyitems(config, items):
+    if jax.device_count() > 1:
+        return
+    skip = pytest.mark.skip(
+        reason="multidevice: needs >1 XLA device "
+        "(run with REPRO_HOST_DEVICES=8)"
+    )
+    for item in items:
+        if "multidevice" in item.keywords:
+            item.add_marker(skip)
 
 
 @pytest.fixture(scope="session")

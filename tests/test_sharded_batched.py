@@ -1,0 +1,463 @@
+"""Sharded-vs-single-device differential suite: scenario-axis sharding
+must be a pure implementation detail.
+
+Every test compares a `BatchedGMGSolver`/`ElasticityService` running on
+a 1/2/4/8-device scenario mesh against the unsharded single-device
+path: identical iteration counts, convergence and `born_converged`
+flags, and solutions equal to machine precision (the partitioned
+program fuses differently, so results are ~1 ulp rather than bitwise).
+
+Device counts come from subsets of ``jax.devices()``: one pytest
+process forced to 8 virtual host devices (``REPRO_HOST_DEVICES=8`` —
+see conftest) covers meshes of 1, 2, 4 and 8 devices.  Tests needing
+more than one device carry the ``multidevice`` marker and auto-skip on
+a single-device run; the mesh-of-one cases run everywhere, keeping the
+sharded code path exercised in the default lane too.
+"""
+
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.distributed.sharding import scenario_mesh, scenario_sharding
+from repro.fem.mesh import beam_hex
+from repro.serve.elasticity_service import ElasticityService, SolveRequest
+from repro.solvers.batched import BatchedGMGSolver, bpcg_result
+from tests._hypothesis_compat import given, settings, st
+
+# (coarse_mesh args, n_h_refine, p): p=1 exercises the h-transfer ladder,
+# p=2 the p-embedding ladder; both stay small enough to compile the full
+# bucket x device matrix on CPU.
+DISCRETIZATIONS = {1: (1, 1), 2: (0, 2)}
+BUCKETS = (1, 2, 4, 8)
+MAXITER = 150
+
+
+def dev_params():
+    return [
+        pytest.param(n, marks=pytest.mark.multidevice) if n > 1
+        else pytest.param(n)
+        for n in (1, 2, 4, 8)
+    ]
+
+
+def _skip_if_too_few(ndev):
+    if ndev > jax.device_count():
+        pytest.skip(f"needs {ndev} devices, have {jax.device_count()}")
+
+
+def scenarios(n: int):
+    """Deterministic mixed batch: varied material contrasts, tractions
+    and tolerances; row 1 (when present) has a zero traction, so it is
+    born converged — the flag must survive sharding."""
+    mats, tr, tol = [], [], []
+    for i in range(n):
+        stiff = 50.0 + 7.0 * (i % 3)
+        soft = 1.0 + 0.5 * (i % 2)
+        mats.append({1: (stiff, 0.9 * stiff), 2: (soft, soft)})
+        if i == 1:
+            tr.append((0.0, 0.0, 0.0))
+        else:
+            tr.append((0.0, 2e-3 * (i % 2), -1e-2 * (1 + 0.2 * (i % 4))))
+        tol.append(1e-9 if i % 3 == 0 else 1e-6)
+    return mats, np.asarray(tr), np.asarray(tol)
+
+
+_SOLVERS: dict = {}
+_REF_FULL: dict = {}
+
+
+def _solver(p: int, ndev) -> BatchedGMGSolver:
+    """One solver per (p, device count), shared across tests so compiled
+    programs are paid for once per session."""
+    key = (p, ndev)
+    if key not in _SOLVERS:
+        refine, p_target = DISCRETIZATIONS[p]
+        _SOLVERS[key] = BatchedGMGSolver(
+            beam_hex(),
+            refine,
+            p_target,
+            maxiter=MAXITER,
+            mesh=None if ndev is None else scenario_mesh(ndev),
+        )
+    return _SOLVERS[key]
+
+
+def _ref_full(p: int, bucket: int):
+    key = (p, bucket)
+    if key not in _REF_FULL:
+        mats, tr, tol = scenarios(bucket)
+        _REF_FULL[key] = _solver(p, None).solve(mats, tr, tol)
+    return _REF_FULL[key]
+
+
+def assert_results_match(res, ref, context: str):
+    np.testing.assert_array_equal(
+        np.asarray(res.iterations), np.asarray(ref.iterations),
+        err_msg=f"{context}: iteration counts diverged",
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res.converged), np.asarray(ref.converged),
+        err_msg=f"{context}: convergence flags diverged",
+    )
+    scale = float(np.abs(np.asarray(ref.x)).max()) or 1.0
+    np.testing.assert_allclose(
+        np.asarray(res.x), np.asarray(ref.x), atol=1e-12 * scale, rtol=0,
+        err_msg=f"{context}: solutions diverged",
+    )
+    np.testing.assert_allclose(
+        np.asarray(res.final_norm), np.asarray(ref.final_norm),
+        rtol=1e-8, atol=1e-300,
+        err_msg=f"{context}: final norms diverged",
+    )
+    np.testing.assert_allclose(
+        np.asarray(res.initial_norm), np.asarray(ref.initial_norm),
+        rtol=1e-8, atol=1e-300,
+        err_msg=f"{context}: initial norms diverged",
+    )
+
+
+# -- solver-level differentials ---------------------------------------------
+@pytest.mark.parametrize("ndev", dev_params())
+@pytest.mark.parametrize("p", [1, 2])
+def test_sharded_full_solve_matches_single_device(p, ndev):
+    """solve() on a 1/2/4/8-device mesh reproduces the unsharded result
+    for every bucket size, including buckets smaller than the mesh
+    (device padding) and non-dividing buckets; born-converged rows keep
+    0 iterations."""
+    _skip_if_too_few(ndev)
+    solver = _solver(p, ndev)
+    for bucket in BUCKETS:
+        mats, tr, tol = scenarios(bucket)
+        res = solver.solve(mats, tr, tol)
+        ref = _ref_full(p, bucket)
+        assert np.asarray(res.x).shape[0] == bucket  # padding sliced off
+        assert_results_match(
+            res, ref, f"p={p} bucket={bucket} devices={ndev}"
+        )
+        if bucket >= 2:  # the zero-traction row is born converged
+            assert int(np.asarray(res.iterations)[1]) == 0
+            assert float(np.asarray(res.initial_norm)[1]) == 0.0
+
+
+def _chunked_solve(solver: BatchedGMGSolver, mats, tr, tol, k: int):
+    """Drive the resumable step program the way the continuous engine
+    does: prepare all rows, reset-chunk, then bounded chunks until no
+    row is active.  Returns the first len(mats) rows of the result."""
+    mats, tr, tol, s = solver.pad_scenarios(mats, tr, tol)
+    n = len(mats)
+    lam, mu = solver.pack_materials(mats)
+    reset = np.ones((n,), dtype=bool)
+    prep = solver.prepare(lam, mu, reset, solver.empty_prep(n))
+    state = solver.run_chunk(
+        tr, tol, reset, solver.empty_state(n), prep, k, do_reset=True
+    )
+    guard = 0
+    while bool(np.asarray(state.active).any()):
+        state = solver.run_chunk(
+            tr, tol, np.zeros((n,), dtype=bool), state, prep, k
+        )
+        guard += 1
+        assert guard < 500, "chunked solve did not drain"
+    res = bpcg_result(state)
+    return dataclasses.replace(
+        res,
+        **{
+            f.name: np.asarray(getattr(res, f.name))[:s]
+            for f in dataclasses.fields(res)
+        },
+    )
+
+
+@pytest.mark.parametrize("ndev", dev_params())
+@pytest.mark.parametrize("p", [1, 2])
+def test_sharded_chunked_solve_matches_single_device(p, ndev):
+    """prepare + run_chunk on a device mesh == the unsharded full solve:
+    chunk boundaries and sharding are both invisible to the iteration."""
+    _skip_if_too_few(ndev)
+    bucket = 4
+    mats, tr, tol = scenarios(bucket)
+    res = _chunked_solve(_solver(p, ndev), mats, tr, tol, k=3)
+    assert_results_match(
+        res, _ref_full(p, bucket), f"chunked p={p} devices={ndev}"
+    )
+
+
+@pytest.mark.multidevice
+def test_sharded_state_and_prep_are_actually_distributed():
+    """The differential tests prove correctness; this proves the point of
+    the exercise — state rows and folded element fields really live on
+    distinct devices (axis-0 NamedSharding over the scenario mesh)."""
+    ndev = min(4, jax.device_count())
+    assert ndev > 1
+    solver = _solver(1, ndev)
+    n = solver.pad_batch(ndev)
+    mats, tr, tol = scenarios(n)
+    lam, mu = solver.pack_materials(mats)
+    reset = np.ones((n,), dtype=bool)
+    prep = solver.prepare(lam, mu, reset, solver.empty_prep(n))
+    state = solver.run_chunk(
+        tr, tol, reset, solver.empty_state(n), prep, 2, do_reset=True
+    )
+    def assert_sharded(x):
+        want = scenario_sharding(solver.mesh, x.ndim)
+        assert x.sharding.is_equivalent_to(want, x.ndim), (
+            x.sharding, want,
+        )
+        assert len(x.sharding.device_set) == ndev
+
+    assert_sharded(state.x)
+    assert_sharded(state.r)
+    for name in ("lam_w", "mu_w"):
+        for w in prep[name]:
+            assert_sharded(w)
+    assert_sharded(prep["chol"])
+
+
+# -- service-level differentials --------------------------------------------
+def service_requests(n: int = 5):
+    reqs = []
+    for i in range(n):
+        stiff = 50.0 + 6.0 * (i % 3)
+        reqs.append(
+            SolveRequest(
+                p=1,
+                refine=1,
+                materials={1: (stiff, stiff), 2: (1.0 + 0.5 * (i % 2), 1.0)},
+                # row 1: zero traction -> born converged, must be
+                # reported (not confused with device padding).
+                traction=(0.0, 0.0, 0.0) if i == 1
+                else (0.0, 1e-3 * (i % 2), -1e-2 * (1 + 0.3 * (i % 3))),
+                rel_tol=1e-9 if i % 3 == 0 else 1e-5,
+                keep_solution=(i % 2 == 0),
+            )
+        )
+    return reqs
+
+
+def assert_reports_match(reps, refs, context: str):
+    assert len(reps) == len(refs)
+    for i, (a, b) in enumerate(zip(reps, refs)):
+        ctx = f"{context} request {i}"
+        assert a.iterations == b.iterations, ctx
+        assert a.converged == b.converged, ctx
+        assert a.born_converged == b.born_converged, ctx
+        assert a.batch_size == b.batch_size, ctx
+        assert a.generation == b.generation, ctx
+        assert a.ndof == b.ndof, ctx
+        np.testing.assert_allclose(
+            a.final_rel_norm, b.final_rel_norm, rtol=1e-8, atol=1e-300,
+            err_msg=ctx,
+        )
+        assert (a.x is None) == (b.x is None), ctx
+        if a.x is not None:
+            scale = float(np.abs(b.x).max()) or 1.0
+            np.testing.assert_allclose(
+                a.x, b.x, atol=1e-12 * scale, rtol=0, err_msg=ctx
+            )
+
+
+_SERVICES: dict = {}
+
+
+def _service(ndev) -> ElasticityService:
+    if ndev not in _SERVICES:
+        _SERVICES[ndev] = ElasticityService(
+            max_batch=4,
+            chunk_iters=3,
+            maxiter=MAXITER,
+            mesh=None if ndev is None else scenario_mesh(ndev),
+        )
+    return _SERVICES[ndev]
+
+
+@pytest.mark.parametrize(
+    "ndev",
+    [pytest.param(1), pytest.param(4, marks=pytest.mark.multidevice)],
+)
+def test_sharded_service_generational_matches_single_device(ndev):
+    """Generational scheduling on a sharded service reproduces the
+    single-device reports: iterations, flags, norms, solutions, and the
+    generation/batch bookkeeping (device padding is invisible)."""
+    _skip_if_too_few(ndev)
+    reqs = service_requests()
+    refs = _service(None).solve(list(reqs))
+    reps = _service(ndev).solve(list(reqs))
+    assert_reports_match(reps, refs, f"generational devices={ndev}")
+    born = [r.born_converged for r in reps]
+    assert born == [False, True, False, False, False]
+    for r in reps:
+        assert r.padded_rows >= r.batch_size
+        assert r.padded_rows % max(ndev, 1) == 0
+
+
+@pytest.mark.parametrize(
+    "ndev",
+    [pytest.param(1), pytest.param(4, marks=pytest.mark.multidevice)],
+)
+def test_sharded_service_continuous_matches_single_device(ndev):
+    """Continuous scheduling (retire/refill/re-bucket) on a sharded
+    service reproduces the single-device reports — step() reads sharded
+    (S,) convergence vectors and per-row state exactly as before."""
+    _skip_if_too_few(ndev)
+    reqs = service_requests()
+    base_ref = dict(_service(None).stats)
+    base = dict(_service(ndev).stats)
+    refs = _service(None).solve_continuous(list(reqs))
+    reps = _service(ndev).solve_continuous(list(reqs))
+    assert_reports_match(reps, refs, f"continuous devices={ndev}")
+    # Host-side scheduling must be sharding-invariant, not just results:
+    # same refill count, and the same number of prepare() calls — the
+    # prep-row-reuse short-circuit must keep absorbing padding/refill
+    # resets so sharding never adds power iterations/refactorizations.
+    # (Deltas — the services are shared across parametrizations.
+    # prep_row_copies is NOT compared: device padding and the coarser
+    # re-bucket ladder legitimately change how many cheap row copies
+    # happen.)
+    for k in ("refills", "prep_calls"):
+        assert (
+            _service(ndev).stats[k] - base[k]
+            == _service(None).stats[k] - base_ref[k]
+        ), k
+
+
+# -- retire/refill invariants under sharding (property-based) ---------------
+@pytest.mark.multidevice
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 6),
+    mat_idx=st.lists(st.integers(0, 2), min_size=6, max_size=6),
+    tight=st.lists(st.booleans(), min_size=6, max_size=6),
+    zero_row=st.integers(-1, 5),
+)
+def test_continuous_refill_invariants_under_sharding(
+    n, mat_idx, tight, zero_row
+):
+    """Random workloads whose live-row count is rarely a multiple of the
+    device count: the sharded continuous engine must (a) surface exactly
+    the submitted tickets — device-padding rows never leak, (b) retire
+    every row with the same iterations/flags as the unsharded engine —
+    refills reset only their own rows, and (c) short-circuit prep for
+    refills whose materials match a prepared row — identical
+    prep_calls/prep_row_copies deltas to the unsharded engine."""
+    if jax.device_count() < 2:
+        pytest.skip("needs >= 2 devices")
+    vocab = [
+        {1: (50.0, 50.0), 2: (1.0, 1.0)},
+        {1: (80.0, 60.0), 2: (2.0, 1.0)},
+        {1: (9.0, 9.0), 2: (1.0, 3.0)},
+    ]
+    reqs = [
+        SolveRequest(
+            p=1,
+            refine=1,
+            materials=vocab[mat_idx[i]],
+            traction=(0.0, 0.0, 0.0) if i == zero_row
+            else (0.0, 0.0, -1e-2 * (1 + 0.1 * i)),
+            rel_tol=1e-9 if tight[i] else 1e-4,
+        )
+        for i in range(n)
+    ]
+    svc_ref, svc = _service(None), _service(2)
+    base_ref = dict(svc_ref.stats)
+    base = dict(svc.stats)
+    tickets_before = svc._next_ticket
+    refs = svc_ref.solve_continuous(list(reqs))
+    reps = svc.solve_continuous(list(reqs))
+    # (a) exactly the submitted tickets surfaced, nothing in flight
+    assert len(reps) == n and svc.idle()
+    assert svc._next_ticket == tickets_before + n
+    assert not svc._completed  # solve_continuous popped exactly ours
+    # (b) per-request outcomes identical to the unsharded engine
+    assert_reports_match(reps, refs, f"hypothesis n={n}")
+    for i, r in enumerate(reps):
+        assert r.born_converged == (i == zero_row)
+    # (c) the expensive prep path is sharding-invariant: refills whose
+    # materials match a prepared row still short-circuit the power
+    # iterations, so sharding never adds prepare() calls.  (Cheap row
+    # copies and re-buckets legitimately differ: device padding rows
+    # and the device-aligned bucket ladder.)
+    for k in ("refills", "prep_calls"):
+        assert svc.stats[k] - base[k] == svc_ref.stats[k] - base_ref[k], k
+
+
+# -- padding accounting -----------------------------------------------------
+def test_bucket_for_rounds_to_device_multiple():
+    """Pure host logic: buckets stay 1/2/4/../max_batch single-device and
+    round up to a device multiple when sharded (including a non-power-of
+    -two device count)."""
+    svc = ElasticityService(max_batch=8)
+    assert [svc.bucket_for(n) for n in (1, 2, 3, 5, 8, 9)] == [
+        1, 2, 4, 8, 8, 8,
+    ]
+    svc.n_shards = 3  # as if mesh had 3 devices
+    assert [svc.bucket_for(n) for n in (1, 2, 3, 5, 8)] == [3, 3, 6, 9, 9]
+    svc.n_shards = 8
+    assert [svc.bucket_for(n) for n in (1, 3, 8)] == [8, 8, 8]
+
+
+def test_report_counts_real_vs_padding_rows():
+    """SolveReport.padded_rows records the compiled program's total rows
+    (bucket incl. padding) while batch_size counts real requests — the
+    pair the throughput benchmark needs to stay honest."""
+    svc = ElasticityService(max_batch=8, maxiter=MAXITER)
+    reps = svc.solve(service_requests(3))
+    assert len(reps) == 3  # padding never surfaced
+    for r in reps:
+        assert r.batch_size == 3
+        assert r.padded_rows == 4  # bucket_for(3)
+    reps = svc.solve_continuous(service_requests(3))
+    assert len(reps) == 3
+    for r in reps:
+        assert r.batch_size <= 3
+        assert r.padded_rows >= r.batch_size
+
+
+@pytest.mark.multidevice
+def test_report_counts_device_padding_rows():
+    """With a device mesh, padded_rows grows to the device-aligned
+    bucket while batch_size still counts only real requests."""
+    ndev = 2
+    _skip_if_too_few(ndev)
+    svc = ElasticityService(
+        max_batch=8, maxiter=MAXITER, mesh=scenario_mesh(ndev)
+    )
+    reps = svc.solve(service_requests(1))
+    assert len(reps) == 1
+    assert reps[0].batch_size == 1
+    assert reps[0].padded_rows == 2  # bucket 1 rounded up to the mesh
+    reps = svc.solve(service_requests(3))
+    assert [r.padded_rows for r in reps] == [4, 4, 4]
+
+
+# -- end-to-end CLI ---------------------------------------------------------
+@pytest.mark.slow
+def test_batched_throughput_devices_cli_end_to_end():
+    """`batched_throughput.py --devices 8 --continuous` runs end-to-end
+    on forced virtual host devices from a single-device parent process
+    (the subprocess forces its own device count before backend init)."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)  # the CLI must force its own devices
+    env.pop("REPRO_HOST_DEVICES", None)
+    env["PYTHONPATH"] = "src"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    res = subprocess.run(
+        [
+            sys.executable, "-m", "benchmarks.batched_throughput",
+            "--devices", "8", "--continuous", "--batch", "4",
+            "--n-requests", "8", "--repeats", "1", "--chunk-iters", "4",
+        ],
+        cwd=root,
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=1800,
+    )
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "scenario mesh: 8 devices (8 visible)" in res.stdout
+    assert "continuous(k=4)" in res.stdout
