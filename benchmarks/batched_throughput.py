@@ -22,9 +22,18 @@ REAL scenarios only: padding rows added for bucket or device alignment
 ride along in ``SolveReport.padded_rows`` and are excluded from the
 scenarios/sec math, so ``--devices 8`` numbers are honest.
 
+``--heterogeneous`` swaps the attribute-dict materials for per-element
+``(lam_e, mu_e)`` lognormal random fields (a 4-field vocabulary, so the
+continuous engine's digest-keyed prep-row reuse still engages).  This is
+the workload the per-element material path exists for; comparing a run
+with and without the flag shows the cost of genuinely heterogeneous
+coefficients is the same compiled program — materials are runtime
+arguments either way.
+
     PYTHONPATH=src python -m benchmarks.batched_throughput [--quick]
     PYTHONPATH=src python -m benchmarks.batched_throughput --continuous
     PYTHONPATH=src python -m benchmarks.batched_throughput --devices 8 --continuous
+    PYTHONPATH=src python -m benchmarks.batched_throughput --heterogeneous --quick
 """
 
 from __future__ import annotations
@@ -43,14 +52,25 @@ from benchmarks.common import fmt_table  # noqa: E402
 P, REFINE = 2, 1
 
 
-def make_requests(n: int, rel_tol: float = 1e-6):
+def _materials_for(i: int, hetero: bool):
+    """Request i's materials: attribute dicts by default, or per-element
+    lognormal random fields (4-seed vocabulary) with --heterogeneous."""
+    if not hetero:
+        return {1: (50.0 + 5 * (i % 3), 50.0), 2: (1.0 + 0.5 * (i % 2), 1.0)}
+    from repro.fem.mesh import beam_hex
+    from repro.launch.serve_solve import make_material_field
+
+    return make_material_field("lognormal:11", beam_hex(), REFINE, i)
+
+
+def make_requests(n: int, rel_tol: float = 1e-6, hetero: bool = False):
     from repro.serve.elasticity_service import SolveRequest
 
     return [
         SolveRequest(
             p=P,
             refine=REFINE,
-            materials={1: (50.0 + 5 * (i % 3), 50.0), 2: (1.0 + 0.5 * (i % 2), 1.0)},
+            materials=_materials_for(i, hetero),
             traction=(0.0, 0.0, -1e-2 * (1 + 0.1 * (i % 4))),
             rel_tol=rel_tol,
         )
@@ -67,18 +87,18 @@ def _real_throughput(reports, dt: float) -> float:
     return len(reports) / dt
 
 
-def bench_batched(batch: int, repeats: int, mesh=None) -> dict:
+def bench_batched(batch: int, repeats: int, mesh=None, hetero: bool = False) -> dict:
     from repro.serve.elasticity_service import ElasticityService
 
     service = ElasticityService(max_batch=batch, mesh=mesh)
     # Warm: builds the hierarchy and compiles the batched program.
     t0 = time.perf_counter()
-    service.solve(make_requests(batch))
+    service.solve(make_requests(batch, hetero=hetero))
     t_warm = time.perf_counter() - t0
     # Steady state: same key -> cached program, setup must be ~0.
     times, setups, pad = [], [], 0
     for _ in range(repeats):
-        reqs = make_requests(batch)
+        reqs = make_requests(batch, hetero=hetero)
         t0 = time.perf_counter()
         reports = service.solve(reqs)
         times.append(time.perf_counter() - t0)
@@ -122,7 +142,9 @@ def bench_sequential(n: int) -> dict:
     }
 
 
-def make_mixed_tol_requests(n: int, loose: float = 1e-4, tight: float = 1e-10):
+def make_mixed_tol_requests(
+    n: int, loose: float = 1e-4, tight: float = 1e-10, hetero: bool = False
+):
     """Mixed-tolerance workload: one tight-tolerance request per four
     loose ones, with varied materials and tractions — the serving regime
     where a minority of slow scenarios gates every generation while the
@@ -133,10 +155,7 @@ def make_mixed_tol_requests(n: int, loose: float = 1e-4, tight: float = 1e-10):
         SolveRequest(
             p=P,
             refine=REFINE,
-            materials={
-                1: (50.0 + 5 * (i % 3), 50.0),
-                2: (1.0 + 0.5 * (i % 2), 1.0),
-            },
+            materials=_materials_for(i, hetero),
             traction=(0.0, 2e-3 * (i % 2), -1e-2 * (1 + 0.1 * (i % 4))),
             rel_tol=tight if i % 4 == 0 else loose,
         )
@@ -151,8 +170,8 @@ def _latency_percentiles(latencies: list[float]) -> tuple[float, float]:
     )
 
 
-def _time_generational(service, n: int):
-    reqs = make_mixed_tol_requests(n)
+def _time_generational(service, n: int, hetero: bool = False):
+    reqs = make_mixed_tol_requests(n, hetero=hetero)
     t0 = time.perf_counter()
     reports = service.solve(reqs)
     dt = time.perf_counter() - t0
@@ -167,8 +186,8 @@ def _time_generational(service, n: int):
     return dt, reports, [float(cum[r.generation]) for r in reports]
 
 
-def _time_continuous(service, n: int):
-    reqs = make_mixed_tol_requests(n)
+def _time_continuous(service, n: int, hetero: bool = False):
+    reqs = make_mixed_tol_requests(n, hetero=hetero)
     t0 = time.perf_counter()
     reports = service.solve_continuous(reqs)
     dt = time.perf_counter() - t0
@@ -184,6 +203,7 @@ def run_continuous(
     repeats: int = 3,
     chunk_iters: int = 8,
     mesh=None,
+    hetero: bool = False,
 ) -> list[dict]:
     """Continuous vs generational on the mixed-tolerance workload.
 
@@ -200,12 +220,12 @@ def run_continuous(
     )
     # Warm: hierarchy build + one compile per (bucket, reset-flag) the
     # workload visits (16, 8, ... as the continuous tail drains).
-    svc_gen.solve(make_mixed_tol_requests(n))
-    svc_cont.solve_continuous(make_mixed_tol_requests(n))
+    svc_gen.solve(make_mixed_tol_requests(n, hetero=hetero))
+    svc_cont.solve_continuous(make_mixed_tol_requests(n, hetero=hetero))
     runs_gen, runs_cont = [], []
     for _ in range(repeats):
-        runs_gen.append(_time_generational(svc_gen, n))
-        runs_cont.append(_time_continuous(svc_cont, n))
+        runs_gen.append(_time_generational(svc_gen, n, hetero=hetero))
+        runs_cont.append(_time_continuous(svc_cont, n, hetero=hetero))
     rows = []
     for policy, runs in (
         ("generational", runs_gen),
@@ -229,15 +249,23 @@ def run_continuous(
     return rows
 
 
-def run(fast: bool = False, quick: bool = False, mesh=None) -> list[dict]:
+def run(
+    fast: bool = False, quick: bool = False, mesh=None, hetero: bool = False
+) -> list[dict]:
     batches = [1, 4] if quick else ([1, 4, 16] if fast else [1, 4, 16, 64])
     n_seq = 2 if quick else 4
     repeats = 1 if quick else 3
-    rows = [bench_sequential(n_seq)]
-    seq_rate = rows[0]["scenarios_per_s"]
+    # The sequential solve_beam baseline only speaks attribute dicts
+    # (its hierarchy builder takes one dict for every level), so under
+    # --heterogeneous it would be a DIFFERENT workload — comparing the
+    # two would conflate material-form cost with conditioning.  Honest
+    # math: no sequential row and no speedup column in that mode.
+    rows = [] if hetero else [bench_sequential(n_seq)]
+    seq_rate = rows[0]["scenarios_per_s"] if rows else None
     for b in batches:
-        row = bench_batched(b, repeats, mesh=mesh)
-        row["speedup_vs_sequential"] = row["scenarios_per_s"] / seq_rate
+        row = bench_batched(b, repeats, mesh=mesh, hetero=hetero)
+        if seq_rate is not None:
+            row["speedup_vs_sequential"] = row["scenarios_per_s"] / seq_rate
         rows.append(row)
     return rows
 
@@ -260,6 +288,9 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=None,
                     help="shard the scenario axis over N devices (forces "
                          "N virtual host devices on CPU)")
+    ap.add_argument("--heterogeneous", action="store_true",
+                    help="per-element lognormal (lam_e, mu_e) random "
+                         "fields instead of attribute dicts")
     args = ap.parse_args()
 
     # Env must be set before anything touches the jax backend.
@@ -275,6 +306,7 @@ def main() -> None:
         print(f"scenario mesh: {mesh.devices.size} devices "
               f"({jax.device_count()} visible)")
 
+    mats = "lognormal fields" if args.heterogeneous else "attribute dicts"
     if args.continuous:
         rows = run_continuous(
             batch=args.batch,
@@ -282,6 +314,7 @@ def main() -> None:
             repeats=args.repeats,
             chunk_iters=args.chunk_iters,
             mesh=mesh,
+            hetero=args.heterogeneous,
         )
         print(
             fmt_table(
@@ -296,28 +329,36 @@ def main() -> None:
                 ],
                 title=(
                     f"Continuous vs generational batching "
-                    f"(mixed tolerances, batch={args.batch}, p={P}, "
-                    f"refine={REFINE}, devices={args.devices or 1}, CPU)"
+                    f"(mixed tolerances, {mats}, batch={args.batch}, "
+                    f"p={P}, refine={REFINE}, "
+                    f"devices={args.devices or 1}, CPU)"
                 ),
             )
         )
         return
-    rows = run(fast=args.fast, quick=args.quick, mesh=mesh)
+    rows = run(
+        fast=args.fast, quick=args.quick, mesh=mesh,
+        hetero=args.heterogeneous,
+    )
+    cols = [
+        "batch",
+        "padded_rows",
+        "scenarios_per_s",
+        "t_generation_s",
+        "t_warm_s",
+        "t_setup_cached_s",
+    ]
+    if not args.heterogeneous:
+        # vs-sequential comparison only exists for the dict workload the
+        # sequential baseline can actually run.
+        cols.append("speedup_vs_sequential")
     print(
         fmt_table(
             rows,
-            [
-                "batch",
-                "padded_rows",
-                "scenarios_per_s",
-                "t_generation_s",
-                "t_warm_s",
-                "t_setup_cached_s",
-                "speedup_vs_sequential",
-            ],
+            cols,
             title=(
-                f"Batched GMG-PCG throughput (p={P}, refine={REFINE}, "
-                f"devices={args.devices or 1}, CPU)"
+                f"Batched GMG-PCG throughput ({mats}, p={P}, "
+                f"refine={REFINE}, devices={args.devices or 1}, CPU)"
             ),
         )
     )

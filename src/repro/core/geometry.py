@@ -24,6 +24,8 @@ __all__ = [
     "QuadratureGeometry",
     "quadrature_geometry",
     "material_fields",
+    "check_material_dict",
+    "check_material_fields",
     "make_quadrature_data",
     "MATERIALS_BEAM",
 ]
@@ -96,6 +98,62 @@ def material_fields(
     known = np.isin(attr, list(materials))
     if not known.all():
         raise ValueError(f"elements with unknown attributes: {set(attr[~known])}")
+    return lam_e, mu_e
+
+
+def check_material_dict(materials: dict, attrs, *, where: str = "materials") -> None:
+    """Validate an attribute -> (lambda, mu) dict against a mesh's
+    attribute set: every mesh attribute must be covered and every
+    coefficient must be positive.  Raises ValueError naming the missing
+    attributes or the first offending attribute and its values."""
+    attr_set = {int(a) for a in np.unique(np.asarray(attrs))}
+    missing = attr_set - {int(a) for a in materials}
+    if missing:
+        raise ValueError(
+            f"{where}: missing mesh attributes {sorted(missing)} "
+            f"(mesh has {tuple(sorted(attr_set))})"
+        )
+    for a in sorted(materials):
+        try:
+            lam, mu = materials[a]
+            lam, mu = float(lam), float(mu)
+        except (TypeError, ValueError):
+            raise ValueError(
+                f"{where}: attribute {a} must map to a (lambda, mu) "
+                f"pair, got {materials[a]!r}"
+            ) from None
+        if not (lam > 0 and mu > 0):  # also catches NaN
+            raise ValueError(
+                f"{where}: attribute {a} has non-positive coefficients "
+                f"(lambda, mu) = ({lam}, {mu}); both must be > 0"
+            )
+
+
+def check_material_fields(
+    lam_e, mu_e, nelem: int, *, where: str = "materials"
+) -> tuple[np.ndarray, np.ndarray]:
+    """Validate a per-element (lam_e, mu_e) coefficient pair: both of
+    shape (nelem,) on the fine mesh, every entry positive.  Raises
+    ValueError naming the mismatched shape (with the expected one) or
+    the first offending element index and value; returns the pair as
+    float64 numpy arrays."""
+    lam_e = np.asarray(lam_e, dtype=np.float64)
+    mu_e = np.asarray(mu_e, dtype=np.float64)
+    for name, f in (("lam_e", lam_e), ("mu_e", mu_e)):
+        if f.shape != (nelem,):
+            raise ValueError(
+                f"{where}: {name} has shape {f.shape}, expected ({nelem},) "
+                f"— one coefficient per fine-mesh element"
+            )
+        bad = np.flatnonzero(~(f > 0))  # ~(x > 0) also catches NaN
+        if bad.size:
+            e = int(bad[0])
+            n = int(bad.size)
+            raise ValueError(
+                f"{where}: {name}[{e}] = {f[e]} is not positive "
+                f"({n} non-positive entr{'y' if n == 1 else 'ies'}; "
+                f"all coefficients must be > 0)"
+            )
     return lam_e, mu_e
 
 

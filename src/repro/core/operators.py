@@ -11,9 +11,10 @@ solvers:
 ``constrained()`` wraps it with MFEM ConstrainedOperator semantics and
 the matrix-free diagonal for the Chebyshev-Jacobi smoother.
 
-Scenario batching: ``materials`` may also be a *sequence* of
-attribute->(lambda, mu) dicts, or a pair of per-element coefficient
-arrays ``(lam_e, mu_e)`` of shape (nelem,) or (S, nelem).  With a
+Scenario batching: ``materials`` may also be a *sequence* of scenario
+entries — attribute->(lambda, mu) dicts and/or per-element
+``(lam_e, mu_e)`` pairs, mixed freely — or a raw coefficient-array pair
+of shape (nelem,) or (S, nelem).  With a
 leading scenario axis the operator acts on (S, nscalar, 3) L-vectors;
 internally the scenario axis is folded into the element axis so every
 PA kernel — including the Pallas one — runs unchanged on a grid S times
@@ -132,16 +133,62 @@ class ElasticityOperator:
             )
 
     # -- materials -----------------------------------------------------------
+    @staticmethod
+    def _is_field_pair(m) -> bool:
+        """A (lam_e, mu_e) scenario entry: two 1-D array-likes."""
+        return (
+            isinstance(m, (tuple, list))
+            and len(m) == 2
+            and np.ndim(m[0]) == 1
+            and np.ndim(m[1]) == 1
+        )
+
     def _normalize_materials(self, materials):
         """Normalize to per-element coefficient fields (lam_e, mu_e) of
-        shape (nelem,) or (S, nelem)."""
+        shape (nelem,) or (S, nelem).
+
+        Accepted forms: one attribute->(lambda, mu) dict; one
+        (lam_e, mu_e) pair of (nelem,) arrays; a scenario *sequence*
+        whose entries are dicts and/or such pairs, mixed freely (each
+        entry one scenario row); or a raw pre-stacked (S, nelem) pair.
+        A sequence of pairs is recognized per entry — it is never
+        mis-read as one stacked pair."""
         mesh = self.space.mesh
         if isinstance(materials, dict):
             return material_fields(mesh, materials)
-        if isinstance(materials, (list, tuple)) and materials and all(
-            isinstance(m, dict) for m in materials
+        if (
+            isinstance(materials, (list, tuple))
+            and len(materials) == 2
+            and all(self._is_field_pair(m) for m in materials)
         ):
-            fields = [material_fields(mesh, m) for m in materials]
+            # Genuinely ambiguous: ([a, b], [c, d]) with 1-D rows reads
+            # both as a raw stacked (2, nelem) pair and as two
+            # (lam_e, mu_e) scenario entries — and the two readings
+            # cross lambda/mu differently.  Refuse loudly instead of
+            # guessing wrong physics.
+            raise ValueError(
+                "ambiguous materials: a length-2 sequence of 1-D array "
+                "pairs reads both as one stacked (2, nelem) (lam, mu) "
+                "pair and as two per-scenario (lam_e, mu_e) pairs; pass "
+                "numpy arrays of shape (2, nelem) for the stacked form, "
+                "or include a dict entry / use another batch size for "
+                "the scenario-sequence form"
+            )
+        if (
+            isinstance(materials, (list, tuple))
+            and materials
+            and not self._is_field_pair(materials)
+            and all(
+                isinstance(m, dict) or self._is_field_pair(m)
+                for m in materials
+            )
+        ):
+            fields = [
+                material_fields(mesh, m)
+                if isinstance(m, dict)
+                else (np.asarray(m[0]), np.asarray(m[1]))
+                for m in materials
+            ]
             return (
                 np.stack([f[0] for f in fields]),
                 np.stack([f[1] for f in fields]),
@@ -150,8 +197,9 @@ class ElasticityOperator:
             lam_e, mu_e = materials
         except (TypeError, ValueError):
             raise TypeError(
-                "materials must be a dict, a sequence of dicts, or a "
-                f"(lam_e, mu_e) array pair; got {type(materials)!r}"
+                "materials must be a dict, a (lam_e, mu_e) array pair, "
+                "or a sequence of dicts / pairs (one per scenario); "
+                f"got {type(materials)!r}"
             ) from None
         return lam_e, mu_e
 

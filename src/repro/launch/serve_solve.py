@@ -11,6 +11,15 @@ Usage:
     PYTHONPATH=src python -m repro.launch.serve_solve --p 1 2  # mixed keys
     PYTHONPATH=src python -m repro.launch.serve_solve --continuous
     PYTHONPATH=src python -m repro.launch.serve_solve --devices 4  # sharded
+    PYTHONPATH=src python -m repro.launch.serve_solve \
+        --material-field lognormal:7   # heterogeneous per-element fields
+
+``--material-field {graded,checkerboard,lognormal[:seed]}`` replaces the
+attribute-dict materials with per-element ``(lam_e, mu_e)`` coefficient
+fields on the fine mesh — graded stiffness along the beam, a two-phase
+checkerboard composite, or a lognormal random field (the classic
+random-media setting).  Requests cycle through a small field vocabulary
+so the continuous engine's digest-keyed prep-row reuse still engages.
 
 ``--devices N`` shards the scenario axis of every compiled solver over N
 devices.  On a CPU-only host it forces N virtual XLA host devices
@@ -29,22 +38,73 @@ import jax
 jax.config.update("jax_enable_x64", True)
 
 
-def make_workload(n_requests: int, ps: list[int], refine: int, base_tol: float):
+def make_material_field(kind: str, coarse_mesh, refine: int, i: int):
+    """Per-element ``(lam_e, mu_e)`` fields on the fine mesh for request
+    ``i``.  ``kind`` is ``graded`` (stiffness ramps down along x from the
+    clamped end), ``checkerboard`` (two-phase composite by element
+    parity) or ``lognormal[:seed]`` (iid lognormal random medium).  A
+    vocabulary of 4 variants per kind keeps digest-keyed prep reuse
+    live under continuous refill."""
+    import numpy as np
+
+    fine = coarse_mesh.refined(refine)
+    nx, ny, nz = fine.shape
+    e = np.arange(fine.nelem)
+    ex, ey, ez = e % nx, (e // nx) % ny, e // (nx * ny)
+    v = i % 4  # field vocabulary index
+    if kind == "graded":
+        t = (ex + 0.5) / nx  # 0 at the clamped x=0 face
+        lam = (50.0 + 5.0 * v) * (1.0 - t) + 1.0
+        mu = 0.8 * lam
+    elif kind == "checkerboard":
+        hard = (ex + ey + ez) % 2 == 0
+        lam = np.where(hard, 50.0 + 5.0 * v, 1.0 + 0.2 * v)
+        mu = np.where(hard, 45.0 + 5.0 * v, 1.0)
+    elif kind.startswith("lognormal"):
+        seed = int(kind.split(":", 1)[1]) if ":" in kind else 0
+        rng = np.random.default_rng(seed * 1000 + v)
+        lam = np.exp(rng.normal(np.log(10.0), 0.6, fine.nelem))
+        mu = np.exp(rng.normal(np.log(8.0), 0.6, fine.nelem))
+    else:
+        raise ValueError(
+            f"unknown --material-field {kind!r} (expected graded, "
+            f"checkerboard or lognormal[:seed])"
+        )
+    return np.asarray(lam, dtype=np.float64), np.asarray(mu, np.float64)
+
+
+def make_workload(
+    n_requests: int,
+    ps: list[int],
+    refine: int,
+    base_tol: float,
+    material_field: str | None = None,
+):
     """A deterministic mixed workload: alternating material contrasts,
-    traction directions/magnitudes and tolerances across ``ps``."""
+    traction directions/magnitudes and tolerances across ``ps``; with
+    ``material_field`` set, attribute dicts are replaced by per-element
+    coefficient fields from :func:`make_material_field`."""
+    from repro.fem.mesh import beam_hex
     from repro.serve.elasticity_service import SolveRequest
 
     reqs = []
     for i in range(n_requests):
-        stiff = 50.0 + 10.0 * (i % 3)
-        soft = 1.0 + 0.5 * (i % 2)
+        p = ps[i % len(ps)]
+        if material_field is None:
+            stiff = 50.0 + 10.0 * (i % 3)
+            soft = 1.0 + 0.5 * (i % 2)
+            materials = {1: (stiff, stiff), 2: (soft, soft)}
+        else:
+            materials = make_material_field(
+                material_field, beam_hex(), refine, i
+            )
         tz = -1e-2 * (1.0 + 0.25 * (i % 4))
         ty = 2e-3 if i % 2 else 0.0
         reqs.append(
             SolveRequest(
-                p=ps[i % len(ps)],
+                p=p,
                 refine=refine,
-                materials={1: (stiff, stiff), 2: (soft, soft)},
+                materials=materials,
                 traction=(0.0, ty, tz),
                 rel_tol=base_tol if i % 2 else base_tol * 1e-2,
             )
@@ -70,6 +130,10 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=None,
                     help="shard the scenario axis over N devices (forces "
                          "N virtual host devices on CPU)")
+    ap.add_argument("--material-field", default=None,
+                    metavar="{graded,checkerboard,lognormal[:seed]}",
+                    help="heterogeneous per-element (lam_e, mu_e) fields "
+                         "instead of attribute dicts")
     args = ap.parse_args()
 
     # Env must be set before anything touches the jax backend.
@@ -93,7 +157,8 @@ def main() -> None:
     )
     for round_i in range(args.repeat):
         reqs = make_workload(
-            args.n_requests, args.p, args.refine, args.rel_tol
+            args.n_requests, args.p, args.refine, args.rel_tol,
+            material_field=args.material_field,
         )
         t0 = time.perf_counter()
         if args.continuous:

@@ -39,6 +39,12 @@ Shared machinery:
   for a padded slot;
 * every request gets a per-request :class:`SolveReport` with its own
   iteration count, convergence flag and residual norm;
+* **heterogeneous materials**: ``SolveRequest.materials`` is either an
+  attribute -> (lambda, mu) dict or a per-element ``(lam_e, mu_e)``
+  array pair on the fine mesh; both are folded into (S, nelem)
+  per-element fields on admission, so dict and array requests batch
+  together, share compiled programs, and participate equally in
+  prep-row reuse (keyed on a content digest of the folded fields);
 * **scenario sharding**: with ``mesh`` set (a 1-D jax.sharding mesh over
   the scenario axis, or an int = "first n devices"), every compiled
   solver shards the batch rows across devices.  Buckets are rounded up
@@ -53,6 +59,7 @@ Shared machinery:
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 from collections import OrderedDict
 from typing import Any
@@ -61,7 +68,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.geometry import MATERIALS_BEAM
+from repro.core.geometry import (
+    MATERIALS_BEAM,
+    check_material_dict,
+    check_material_fields,
+)
 from repro.fem.mesh import HexMesh, beam_hex
 from repro.solvers.batched import BatchedGMGSolver, BpcgState
 
@@ -70,15 +81,51 @@ __all__ = ["SolveRequest", "SolveReport", "ElasticityService"]
 
 @dataclasses.dataclass
 class SolveRequest:
-    """One parameterized beam-benchmark scenario."""
+    """One parameterized beam-benchmark scenario.
+
+    ``materials`` accepts two forms (``None`` = the paper's beam
+    materials):
+
+    * an attribute -> (lambda, mu) dict — piecewise-constant by mesh
+      attribute, e.g. ``{1: (50.0, 50.0), 2: (1.0, 1.0)}``;
+    * a ``(lam_e, mu_e)`` pair of per-element coefficient arrays, each
+      of shape (nelem_fine,) where ``nelem_fine =
+      coarse_mesh.nelem * 8**refine`` — one (lambda, mu) per element of
+      the *fine* (solve) mesh, enabling graded / composite /
+      random-field scenarios.  Coarser GMG levels see the field through
+      an exact descendant average, so a piecewise-constant array
+      reproduces the equivalent dict request bit-for-bit.
+
+    Both forms are validated at ``submit()`` (coverage/positivity for
+    dicts; shape/positivity per element for arrays) so invalid requests
+    fail before any batch state is touched.  ``rel_tol`` is the
+    MFEM-style relative residual tolerance; ``keep_solution`` attaches
+    the (nscalar, 3) solution vector to the report."""
 
     p: int = 2
     refine: int = 1
-    materials: dict[int, tuple[float, float]] | None = None
+    materials: dict[int, tuple[float, float]] | tuple[Any, Any] | None = None
     traction: tuple[float, float, float] = (0.0, 0.0, -1e-2)
     rel_tol: float = 1e-6
     coarse_mesh: HexMesh | None = None
     keep_solution: bool = False
+
+
+def _req_materials(req: SolveRequest):
+    """The request's materials with the beam default applied."""
+    return req.materials if req.materials is not None else MATERIALS_BEAM
+
+
+def _material_digest(lam_row: np.ndarray, mu_row: np.ndarray) -> bytes:
+    """Content digest of one folded (lam_e, mu_e) row pair.  The
+    continuous engine keys prep-row reuse on this digest: two rows with
+    equal digests carry bitwise-equal per-element fields (verified
+    against the snapshot on match), so heterogeneous-field requests
+    short-circuit power iterations exactly like repeated dicts."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(np.ascontiguousarray(lam_row))
+    h.update(np.ascontiguousarray(mu_row))
+    return h.digest()
 
 
 @dataclasses.dataclass
@@ -132,20 +179,26 @@ class _Flight:
         self.t_setup = t_setup
         self.bucket = 0
         self.slots: list[_Slot | None] = []
-        n_attr = len(solver.attr_values)
-        self.lam = np.zeros((0, n_attr))
-        self.mu = np.zeros((0, n_attr))
+        # Folded (bucket, nelem_fine) per-element material fields —
+        # attribute dicts are expanded on admission, so dict and array
+        # requests are indistinguishable from here down.
+        ne = solver.fine_space.nelem
+        self.lam = np.zeros((0, ne))
+        self.mu = np.zeros((0, ne))
+        self.mat_digest = np.zeros((0,), dtype=object)
         self.tr = np.zeros((0, 3))
         self.tol = np.zeros((0,))
         self.state: BpcgState | None = None
         self.prep: dict | None = None
         # Materials each prep row was computed for (prep_valid rows
-        # only).  Kept separately from lam/mu — a retiring row's prep
-        # stays valid for its OLD materials until overwritten, so it can
-        # donate its derived data to a refill with a matching config.
+        # only), as a content digest + field snapshot.  Kept separately
+        # from lam/mu — a retiring row's prep stays valid for its OLD
+        # materials until overwritten, so it can donate its derived data
+        # to a refill with a matching config.
         self.prep_valid = np.zeros((0,), dtype=bool)
-        self.prep_lam = np.zeros((0, n_attr))
-        self.prep_mu = np.zeros((0, n_attr))
+        self.prep_digest = np.zeros((0,), dtype=object)
+        self.prep_lam = np.zeros((0, ne))
+        self.prep_mu = np.zeros((0, ne))
         self.pending_reset: np.ndarray | None = None
         self.chunks = 0
 
@@ -223,21 +276,45 @@ class ElasticityService:
 
     def submit(self, request: SolveRequest) -> int:
         """Non-blocking intake: enqueue a request and return its ticket.
+
         Safe to call while flights are mid-chunk — the next ``step``
-        admits it into the first free slot of its key.  Invalid requests
-        fail here, before any batch state is touched."""
+        admits it into the first free slot of its discretization key.
+        Invalid requests fail HERE, before any batch state is touched:
+        attribute dicts must cover every mesh attribute with positive
+        coefficients, and per-element ``(lam_e, mu_e)`` array pairs must
+        have shape (nelem_fine,) = (coarse_mesh.nelem * 8**refine,) with
+        every entry positive.  Error messages name the offending
+        attribute / element index and the expected shape."""
         if request.materials is not None:
             mesh = (
                 request.coarse_mesh
                 if request.coarse_mesh is not None
                 else beam_hex()
             )
-            attrs = {int(a) for a in np.unique(mesh.attributes())}
-            missing = attrs - set(request.materials)
-            if missing:
-                raise ValueError(
-                    f"request materials missing mesh attributes "
-                    f"{sorted(missing)} (mesh has {tuple(sorted(attrs))})"
+            m = request.materials
+            if isinstance(m, dict):
+                check_material_dict(
+                    m, mesh.attributes(), where="request materials"
+                )
+            else:
+                try:
+                    lam_e, mu_e = m
+                except (TypeError, ValueError):
+                    raise TypeError(
+                        f"request materials: expected an attribute->"
+                        f"(lambda, mu) dict or a (lam_e, mu_e) array "
+                        f"pair, got {type(m).__name__!r}"
+                    ) from None
+                nelem_fine = mesh.nelem * 8**request.refine
+                check_material_fields(
+                    lam_e,
+                    mu_e,
+                    nelem_fine,
+                    where=(
+                        f"request materials (p={request.p}, "
+                        f"refine={request.refine}, coarse mesh "
+                        f"{mesh.shape})"
+                    ),
                 )
         ticket = self._next_ticket
         self._next_ticket += 1
@@ -346,7 +423,9 @@ class ElasticityService:
 
     def drain(self) -> list[SolveReport]:
         """Non-blocking: pop every completed report (submission order).
-        Pairs with ``submit`` — what's still in flight stays in flight."""
+        Pairs with ``submit`` — what's still in flight stays in flight;
+        a report is never yielded twice, and padding/device-alignment
+        rows never appear here at all."""
         out = [self._completed.pop(t) for t in sorted(self._completed)]
         return out
 
@@ -423,14 +502,16 @@ class ElasticityService:
             flight.state = solver.empty_state(bucket)
             flight.prep = solver.empty_prep(bucket)
             flight.slots = [None] * bucket
-            n_attr = len(solver.attr_values)
-            flight.lam = np.zeros((bucket, n_attr))
-            flight.mu = np.zeros((bucket, n_attr))
+            ne = solver.fine_space.nelem
+            flight.lam = np.zeros((bucket, ne))
+            flight.mu = np.zeros((bucket, ne))
+            flight.mat_digest = np.zeros((bucket,), dtype=object)
             flight.tr = np.zeros((bucket, 3))
             flight.tol = np.full((bucket,), 1e-6)
             flight.prep_valid = np.zeros((bucket,), dtype=bool)
-            flight.prep_lam = np.zeros((bucket, n_attr))
-            flight.prep_mu = np.zeros((bucket, n_attr))
+            flight.prep_digest = np.zeros((bucket,), dtype=object)
+            flight.prep_lam = np.zeros((bucket, ne))
+            flight.prep_mu = np.zeros((bucket, ne))
             flight.bucket = bucket
             reset = np.ones((bucket,), dtype=bool)
         elif bucket != flight.bucket:
@@ -448,9 +529,11 @@ class ElasticityService:
             idx = np.asarray(rows)
             flight.lam = flight.lam[idx]
             flight.mu = flight.mu[idx]
+            flight.mat_digest = flight.mat_digest[idx]
             flight.tr = flight.tr[idx]
             flight.tol = flight.tol[idx]
             flight.prep_valid = flight.prep_valid[idx]
+            flight.prep_digest = flight.prep_digest[idx]
             flight.prep_lam = flight.prep_lam[idx]
             flight.prep_mu = flight.prep_mu[idx]
             flight.bucket = bucket
@@ -467,9 +550,12 @@ class ElasticityService:
             if flight.slots[row] is not None:  # pragma: no cover
                 raise AssertionError(f"slot {row} double-assigned")
             flight.slots[row] = _Slot(ticket, req, now)
-            lam, mu = solver.pack_materials([req.materials or MATERIALS_BEAM])
+            lam, mu = solver.pack_materials([_req_materials(req)])
             flight.lam[row] = np.asarray(lam[0])
             flight.mu[row] = np.asarray(mu[0])
+            flight.mat_digest[row] = _material_digest(
+                flight.lam[row], flight.mu[row]
+            )
             flight.tr[row] = req.traction
             flight.tol[row] = req.rel_tol
             reset[row] = True
@@ -486,6 +572,7 @@ class ElasticityService:
                 if flight.slots[row] is None and reset[row]:
                     flight.lam[row] = flight.lam[src]
                     flight.mu[row] = flight.mu[src]
+                    flight.mat_digest[row] = flight.mat_digest[src]
                     flight.tr[row] = 0.0
                     flight.tol[row] = 1e-6
         flight.pending_reset = reset if reset.any() else None
@@ -493,19 +580,23 @@ class ElasticityService:
 
     def _refresh_prep(self, flight: _Flight, reset: np.ndarray) -> None:
         """Make every reset row's prep match its (new) materials.  Rows
-        whose materials bitwise-match an already-valid row reuse that
-        row's derived data (a cheap device gather — prep depends only on
-        materials); only genuinely new material configurations pay the
-        ``prepare`` power iterations + refactorization."""
+        whose folded per-element fields content-match an already-valid
+        row — digest equality first (O(1) per candidate, heterogeneous
+        fields included), confirmed bitwise against the snapshot — reuse
+        that row's derived data with a cheap device gather (prep depends
+        only on materials); only genuinely new material configurations
+        pay the ``prepare`` power iterations + refactorization."""
         solver = flight.solver
         src_rows, dst_rows, unresolved = [], [], []
         sources = [s for s in range(flight.bucket) if flight.prep_valid[s]]
         for r in np.flatnonzero(reset):
+            dig = flight.mat_digest[r]
             match = next(
                 (
                     s
                     for s in sources
-                    if np.array_equal(flight.prep_lam[s], flight.lam[r])
+                    if flight.prep_digest[s] == dig
+                    and np.array_equal(flight.prep_lam[s], flight.lam[r])
                     and np.array_equal(flight.prep_mu[s], flight.mu[r])
                 ),
                 None,
@@ -534,6 +625,7 @@ class ElasticityService:
             )
             self.stats["prep_calls"] += 1
         flight.prep_valid[reset] = True
+        flight.prep_digest[reset] = flight.mat_digest[reset]
         flight.prep_lam[reset] = flight.lam[reset]
         flight.prep_mu[reset] = flight.mu[reset]
 
@@ -564,8 +656,14 @@ class ElasticityService:
     # -- generational batching -----------------------------------------------
     def solve(self, requests: list[SolveRequest] | None = None) -> list[SolveReport]:
         """Generational path: drain the queue (plus ``requests``) and
-        return one report per request, in submission order.  Do not mix
-        with in-flight continuous work — use ``solve_continuous`` there."""
+        return one report per request, in submission order.
+
+        Each discretization key's requests are solved in fixed batches
+        padded to the smallest sufficient (device-aligned) bucket;
+        padding rows are internal and never surfaced.  Materials may be
+        attribute dicts or per-element array pairs, mixed freely within
+        a batch.  Do not mix with in-flight continuous work — use
+        ``solve_continuous`` there."""
         if requests:
             for r in requests:
                 self.submit(r)
@@ -607,7 +705,7 @@ class ElasticityService:
         # shared convention in BatchedGMGSolver.pad_scenarios.
         n_pad = self.bucket_for(n_real) - n_real
         materials, tractions, rel_tols, _ = solver.pad_scenarios(
-            [r.materials or MATERIALS_BEAM for r in reqs],
+            [_req_materials(r) for r in reqs],
             [r.traction for r in reqs],
             [r.rel_tol for r in reqs],
             n=n_real + n_pad,

@@ -74,7 +74,12 @@ from repro.distributed.sharding import (
     normalize_scenario_mesh,
     pin_scenario,
 )
-from repro.fem.mesh import HexMesh
+from repro.core.geometry import (
+    check_material_dict,
+    check_material_fields,
+    material_fields,
+)
+from repro.fem.mesh import HexMesh, fine_descendants
 from repro.fem.space import H1Space
 from repro.fem.transfer import make_transfer
 from repro.solvers.chebyshev import ChebyshevSmoother, _expand
@@ -297,12 +302,14 @@ class BatchedGMGSolver:
 
     Construction builds everything material-independent for the beam
     benchmark family: the mesh/degree hierarchy, transfer operators,
-    element->attribute index maps, and the boundary traction pattern.
-    ``solve`` takes per-scenario attribute materials, traction vectors
-    and tolerances and runs to completion; ``prepare`` + ``run_chunk``
-    expose the same solve as a resumable step program for continuous
-    batching.  Each jitted entry point is traced once per batch size
-    (bucket) and reused for every subsequent call of the same shape.
+    per-level fine-descendant maps, and the boundary traction pattern.
+    ``solve`` takes per-scenario materials (attribute dicts and/or
+    per-element (lam_e, mu_e) coefficient arrays — see
+    :meth:`pack_materials`), traction vectors and tolerances and runs to
+    completion; ``prepare`` + ``run_chunk`` expose the same solve as a
+    resumable step program for continuous batching.  Each jitted entry
+    point is traced once per batch size (bucket) and reused for every
+    subsequent call of the same shape.
     """
 
     def __init__(
@@ -338,15 +345,21 @@ class BatchedGMGSolver:
         spaces = hierarchy_spaces(coarse_mesh, n_h_refine, p_target)
         self.spaces = spaces
 
-        # Attribute vocabulary (static): scenario materials arrive as
-        # (S, n_attr) value arrays indexed by this ordering.
+        # Attribute vocabulary (static): kept for validating attribute-
+        # dict scenarios against the mesh (pack_materials).
         self.attr_values: tuple[int, ...] = tuple(
             int(a) for a in np.unique(coarse_mesh.attributes())
         )
-        attr_lut = {a: i for i, a in enumerate(self.attr_values)}
 
+        # Scenario materials travel as (S, nelem_fine) per-element
+        # coefficient fields (attribute dicts are expanded on intake by
+        # pack_materials).  Each coarser h-level sees the fine field
+        # through its fine-descendant map — an exact power-of-two tree
+        # average (see _restrict_field); p-embedding levels share the
+        # fine mesh, so their map is the identity (stored as None).
+        fine_mesh = spaces[-1].mesh
         self._base_ops = []
-        self._attr_idx = []
+        self._desc_idx: list[Any] = []
         for i, sp in enumerate(spaces):
             lvl_assembly = assembly if i > 0 else "paop"
             # Base operators are geometry/tables carriers only: every
@@ -361,11 +374,10 @@ class BatchedGMGSolver:
                 shard_mesh=self.mesh,
             )
             self._base_ops.append(op)
-            self._attr_idx.append(
-                np.asarray(
-                    [attr_lut[int(a)] for a in sp.mesh.attributes()],
-                    dtype=np.int32,
-                )
+            self._desc_idx.append(
+                None
+                if sp.nelem == fine_mesh.nelem
+                else jnp.asarray(fine_descendants(sp.mesh, fine_mesh))
             )
 
         self.transfers = [
@@ -403,12 +415,12 @@ class BatchedGMGSolver:
     def pad_scenarios(self, materials, tractions, rel_tol, n: int | None = None):
         """Pad a scenario batch to ``n`` rows (default: the device-aligned
         ``pad_batch`` size) with born-converged padding rows: the first
-        scenario's materials — keeps the batched operators SPD — and a
-        zero traction, so b == 0 makes them free (0 iterations).  The ONE
-        definition of the padding-row convention; the service and the
-        differential tests both go through it.  Returns
-        ``(materials, tractions, rel_tols, n_real)`` with rel_tols
-        broadcast to a per-row array."""
+        scenario's materials (dict or per-element array pair alike —
+        keeps the batched operators SPD) and a zero traction, so b == 0
+        makes them free (0 iterations).  The ONE definition of the
+        padding-row convention; the service and the differential tests
+        both go through it.  Returns ``(materials, tractions, rel_tols,
+        n_real)`` with rel_tols broadcast to a per-row array."""
         s = len(materials)
         if n is None:
             n = self.pad_batch(s)
@@ -569,24 +581,45 @@ class BatchedGMGSolver:
         )
 
     # -- traced bodies -------------------------------------------------------
+    def _restrict_field(self, field, level: int):
+        """Restrict a (S, nelem_fine) per-element coefficient field to
+        hierarchy level ``level`` by averaging each level element's fine
+        descendants.  The reduction is a pairwise halving tree over the
+        (power-of-two) descendant count, so it is *exact* whenever all
+        descendants of an element carry the same value — which is what
+        makes a piecewise-constant array field reproduce the equivalent
+        attribute-dict scenario bit-for-bit on every level.  Identity
+        (no gather) on levels that share the fine mesh."""
+        desc = self._desc_idx[level]
+        if desc is None:
+            return field
+        g = field[:, desc]  # (S, nelem_level, n_children)
+        k = g.shape[-1]
+        while g.shape[-1] > 1:
+            g = g[..., 0::2] + g[..., 1::2]
+        return g[..., 0] / k
+
     def _prepare_body(self, lam_vals, mu_vals, reset_mask, prep) -> dict:
-        """Fold the (S, n_attr) material values of the masked rows into
-        the per-level weighted fields in place, and recompute the derived
-        per-scenario data (smoother dinv/lambda_max, coarse Cholesky) for
-        exactly those rows; unmasked rows keep their prep bitwise."""
+        """Fold the (S, nelem_fine) material fields of the masked rows
+        into the per-level weighted fields in place (coarser levels via
+        :meth:`_restrict_field`), and recompute the derived per-scenario
+        data (smoother dinv/lambda_max, coarse Cholesky) for exactly
+        those rows; unmasked rows keep their prep bitwise."""
         s = lam_vals.shape[0]
         lam_vals, mu_vals, reset_mask, prep = self._pin(
             (lam_vals, mu_vals, reset_mask, prep)
         )
         lam_w, mu_w, dinv, lmax = [], [], [], []
         chol = None
-        for i, (base, idx) in enumerate(zip(self._base_ops, self._attr_idx)):
+        for i, base in enumerate(self._base_ops):
             sp = self.spaces[i]
             prev = base.with_material_weights(
                 prep["lam_w"][i], prep["mu_w"][i], s
             )
             op = prev.with_materials_rows(
-                lam_vals[:, idx], mu_vals[:, idx], reset_mask
+                self._restrict_field(lam_vals, i),
+                self._restrict_field(mu_vals, i),
+                reset_mask,
             )
             lam_w.append(self._pin(op.lam_w))
             mu_w.append(self._pin(op.mu_w))
@@ -703,27 +736,73 @@ class BatchedGMGSolver:
         return bpcg_result(self._pin(state))
 
     # -- public entry --------------------------------------------------------
-    def pack_materials(self, materials: list[dict]) -> tuple[Any, Any]:
-        """(S,) list of attribute->(lambda, mu) dicts -> (S, n_attr) value
-        arrays in ``attr_values`` order."""
-        lam = np.empty((len(materials), len(self.attr_values)))
+    def pack_materials(self, materials: list) -> tuple[Any, Any]:
+        """Normalize a length-S scenario list into (S, nelem_fine)
+        per-element coefficient fields.
+
+        Each entry is either an attribute -> (lambda, mu) dict
+        (piecewise-constant by mesh attribute) or a ``(lam_e, mu_e)``
+        array pair of shape (nelem_fine,) giving one coefficient per
+        FINE-mesh element; the two forms mix freely within one batch.
+        Coarser hierarchy levels see each field through an exact
+        power-of-two descendant average (:meth:`_restrict_field`), so a
+        piecewise-constant array reproduces the equivalent dict scenario
+        bit-for-bit.  Raises ValueError naming the scenario plus the
+        missing/offending attribute (dicts) or the mismatched shape /
+        first non-positive element index (arrays)."""
+        ne = self.fine_space.nelem
+        fine_mesh = self.fine_space.mesh
+        lam = np.empty((len(materials), ne))
         mu = np.empty_like(lam)
         for si, m in enumerate(materials):
-            missing = set(self.attr_values) - set(m)
-            if missing:
-                raise ValueError(
-                    f"scenario {si} materials missing mesh attributes "
-                    f"{sorted(missing)} (mesh has {self.attr_values})"
+            where = f"scenario {si} materials"
+            if isinstance(m, dict):
+                check_material_dict(m, self.attr_values, where=where)
+                lam[si], mu[si] = material_fields(fine_mesh, m)
+            else:
+                if getattr(m, "ndim", None) is not None and np.ndim(m) != 1:
+                    # A bare 2-D array entry means the caller passed the
+                    # raw stacked (lam_2d, mu_2d) pair itself instead of
+                    # a scenario list — unpacking its rows here would
+                    # silently cross-pair lambda/mu across scenarios.
+                    raise TypeError(
+                        f"{where}: got a {np.ndim(m)}-D array as a "
+                        f"scenario entry; pack_materials takes a LIST "
+                        f"of per-scenario entries (dicts or (lam_e, "
+                        f"mu_e) pairs) — for a pre-stacked (S, nelem) "
+                        f"pair use list(zip(lam, mu))"
+                    )
+                try:
+                    lam_e, mu_e = m
+                except (TypeError, ValueError):
+                    raise TypeError(
+                        f"{where}: expected an attribute->(lambda, mu) "
+                        f"dict or a (lam_e, mu_e) array pair, got "
+                        f"{type(m).__name__!r}"
+                    ) from None
+                lam[si], mu[si] = check_material_fields(
+                    lam_e, mu_e, ne, where=where
                 )
-            for ai, a in enumerate(self.attr_values):
-                lam[si, ai], mu[si, ai] = m[a]
         return jnp.asarray(lam, self.dtype), jnp.asarray(mu, self.dtype)
 
     def prepare(self, lam_vals, mu_vals, reset_mask, prep) -> dict:
         """Jitted: fold the masked rows' new materials into the per-row
         operator fields and refresh their derived data (see
-        ``_prepare_body``).  One trace per batch size."""
-        self._check_batch(int(np.shape(lam_vals)[0]), "prepare")
+        ``_prepare_body``).
+
+        ``lam_vals``/``mu_vals`` are (S, nelem_fine) per-element fields
+        (the output of :meth:`pack_materials`); S must divide the device
+        mesh when sharded — the fields ride the same axis-0
+        NamedSharding as the rest of the prep pytree.  Rows NOT selected
+        by ``reset_mask`` keep their prep bitwise.  One trace per batch
+        size."""
+        s, ne = np.shape(lam_vals)
+        self._check_batch(int(s), "prepare")
+        if ne != self.fine_space.nelem:
+            raise ValueError(
+                f"prepare: material fields have {ne} elements per row, "
+                f"expected nelem_fine = {self.fine_space.nelem}"
+            )
         lam_vals, mu_vals, reset_mask, prep = self._put(
             (lam_vals, mu_vals, reset_mask, prep)
         )
@@ -736,8 +815,13 @@ class BatchedGMGSolver:
         """Jitted: advance the batch by up to ``k_iters`` iterations.
         With ``do_reset`` the masked rows are first re-initialized for
         their (new) tractions/tolerances: x = 0, r = b, fresh thresholds,
-        iteration count 0.  ``k_iters`` is a runtime argument — any chunk
-        length reuses the same compiled program."""
+        iteration count 0 (their materials must already be folded into
+        ``prep`` via :meth:`prepare` or :meth:`copy_prep_rows`); rows
+        outside the mask resume bit-identically.  The batch size must
+        divide the device mesh when sharded — padding rows are the
+        caller's job (see :meth:`pad_scenarios`).  ``k_iters`` is a
+        runtime argument — any chunk length reuses the same compiled
+        program."""
         tractions = jnp.asarray(tractions, self.dtype)
         self._check_batch(int(tractions.shape[0]), "run_chunk")
         rel = jnp.broadcast_to(
@@ -759,7 +843,10 @@ class BatchedGMGSolver:
     ) -> BPCGResult:
         """Solve S scenarios in one compiled program.
 
-        materials: length-S list of attribute->(lambda, mu) dicts
+        materials: length-S list; each entry an attribute->(lambda, mu)
+                   dict or a (lam_e, mu_e) per-element array pair of
+                   shape (nelem_fine,) — the forms mix freely (see
+                   :meth:`pack_materials`)
         tractions: (S, 3) traction vectors on the traction face
         rel_tol:   scalar or (S,) per-scenario relative tolerances
 

@@ -1,0 +1,370 @@
+"""Heterogeneous per-element material fields, end to end.
+
+The service accepts ``SolveRequest.materials`` as an attribute dict or
+a per-element ``(lam_e, mu_e)`` array pair; both are folded to
+(S, nelem) fields on admission and coarser GMG levels see them through
+an exact power-of-two descendant average.  This suite locks down:
+
+* the fine-descendant map itself (attribute inheritance, coverage);
+* the bit-for-bit differential: a piecewise-constant array request
+  reproduces the equivalent attribute-dict request's solutions AND
+  iteration counts exactly — generational and continuous scheduling, on
+  1 device and (multidevice lane) an 8-device scenario mesh;
+* form-invariance of the continuous engine under retire/refill (a
+  hypothesis property): replacing any subset of a batch's dicts with
+  their bitwise-equal array twins changes no report and no scheduling
+  stat — prep-row reuse keys on field content, not on material form —
+  and padding rows never surface;
+* genuinely heterogeneous (graded/random) fields converge and differ
+  from their homogenized counterparts;
+* precise validation errors at ``submit()`` and ``pack_materials``:
+  offending attribute / element index / expected shape by name.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.geometry import MATERIALS_BEAM, material_fields
+from repro.distributed.sharding import scenario_mesh
+from repro.fem.mesh import beam_hex, fine_descendants
+from repro.serve.elasticity_service import ElasticityService, SolveRequest
+from repro.solvers.batched import BatchedGMGSolver
+from tests._hypothesis_compat import given, settings, st
+
+MATS_A = {1: (50.0, 50.0), 2: (1.0, 1.0)}
+MATS_B = {1: (80.0, 60.0), 2: (2.0, 1.0)}
+MATS_C = {1: (9.0, 9.0), 2: (1.0, 3.0)}
+VOCAB = (MATS_A, MATS_B, MATS_C)
+
+FINE = beam_hex().refined(1)  # the p=1/refine=1 solve mesh (64 elements)
+VOCAB_ARR = tuple(material_fields(FINE, m) for m in VOCAB)
+MAXITER = 150
+
+
+def _skip_if_too_few(ndev):
+    if ndev > jax.device_count():
+        pytest.skip(f"needs {ndev} devices, have {jax.device_count()}")
+
+
+def dev_params():
+    return [
+        pytest.param(1),
+        pytest.param(8, marks=pytest.mark.multidevice),
+    ]
+
+
+# -- the descendant map ------------------------------------------------------
+def test_fine_descendants_cover_and_inherit():
+    """Every fine element appears exactly once in its parent's row and
+    carries the parent's attribute (for 1 and 2 refinements); the
+    same-mesh map is the identity."""
+    coarse = beam_hex(4, 2, 1)
+    for times in (1, 2):
+        fine = coarse.refined(times)
+        desc = fine_descendants(coarse, fine)
+        assert desc.shape == (coarse.nelem, 8**times)
+        assert sorted(desc.ravel().tolist()) == list(range(fine.nelem))
+        fattr, cattr = fine.attributes(), coarse.attributes()
+        for e in range(coarse.nelem):
+            assert (fattr[desc[e]] == cattr[e]).all()
+    ident = fine_descendants(coarse, coarse)
+    np.testing.assert_array_equal(ident[:, 0], np.arange(coarse.nelem))
+    with pytest.raises(ValueError, match="not a uniform"):
+        fine_descendants(coarse, beam_hex(12, 2, 1))
+
+
+def test_level_restriction_is_exact_for_piecewise_constant_fields():
+    """The solver's per-level restriction (pairwise halving tree over
+    descendants) returns the attribute value EXACTLY on every level when
+    the fine field is constant per coarse element — the property the
+    bit-for-bit differential rests on — and the plain mean of a graded
+    field otherwise."""
+    solver = BatchedGMGSolver(beam_hex(), 2, 1, maxiter=MAXITER)
+    fine = solver.fine_space.mesh
+    lam_e, mu_e = material_fields(fine, MATS_B)
+    field = np.asarray(lam_e)[None]  # (1, nelem_fine)
+    for i, sp in enumerate(solver.spaces):
+        lvl = np.asarray(solver._restrict_field(field, i))
+        expect = material_fields(sp.mesh, MATS_B)[0][None]
+        np.testing.assert_array_equal(lvl, expect)  # bitwise
+    ramp = np.linspace(1.0, 50.0, fine.nelem)[None]
+    lvl0 = np.asarray(solver._restrict_field(ramp, 0))
+    desc = fine_descendants(solver.spaces[0].mesh, fine)
+    np.testing.assert_allclose(lvl0[0], ramp[0][desc].mean(axis=1), rtol=1e-14)
+
+
+# -- bit-for-bit differential: array vs dict ---------------------------------
+def _requests(forms, keep=True):
+    """5 mixed scenarios on the p=1/refine=1 key; row 1 has zero
+    traction (born converged).  ``forms[i]`` picks dict or array
+    materials for request i."""
+    reqs = []
+    for i in range(5):
+        m = VOCAB[i % 3] if forms[i] == "dict" else VOCAB_ARR[i % 3]
+        reqs.append(
+            SolveRequest(
+                p=1,
+                refine=1,
+                materials=m,
+                traction=(0.0, 0.0, 0.0) if i == 1
+                else (0.0, 1e-3 * (i % 2), -1e-2 * (1 + 0.3 * i)),
+                rel_tol=1e-9 if i % 3 == 0 else 1e-5,
+                keep_solution=keep,
+            )
+        )
+    return reqs
+
+
+_SERVICES: dict = {}
+
+
+def _service(ndev: int) -> ElasticityService:
+    if ndev not in _SERVICES:
+        _SERVICES[ndev] = ElasticityService(
+            max_batch=4,
+            chunk_iters=3,
+            maxiter=MAXITER,
+            mesh=None if ndev == 1 else scenario_mesh(ndev),
+        )
+    return _SERVICES[ndev]
+
+
+def assert_reports_bitwise(reps, refs, context):
+    assert len(reps) == len(refs)
+    for i, (a, b) in enumerate(zip(reps, refs)):
+        ctx = f"{context} request {i}"
+        assert a.iterations == b.iterations, ctx
+        assert a.converged == b.converged, ctx
+        assert a.born_converged == b.born_converged, ctx
+        assert a.final_rel_norm == b.final_rel_norm, ctx  # bitwise
+        assert (a.x is None) == (b.x is None), ctx
+        if a.x is not None:
+            np.testing.assert_array_equal(a.x, b.x, err_msg=ctx)
+
+
+@pytest.mark.parametrize("ndev", dev_params())
+@pytest.mark.parametrize("mode", ["generational", "continuous"])
+def test_array_request_reproduces_dict_request_bit_for_bit(mode, ndev):
+    """A piecewise-constant (lam_e, mu_e) array request must reproduce
+    the equivalent attribute-dict request EXACTLY — same iteration
+    counts, same flags, bitwise-equal solutions — under both scheduling
+    policies, single-device and on an 8-device scenario mesh."""
+    _skip_if_too_few(ndev)
+    svc = _service(ndev)
+    solve = svc.solve if mode == "generational" else svc.solve_continuous
+    refs = solve(_requests(["dict"] * 5))
+    reps = solve(_requests(["array"] * 5))
+    assert_reports_bitwise(reps, refs, f"{mode} ndev={ndev} all-array")
+    assert [r.born_converged for r in reps] == [False, True, False, False,
+                                                False]
+    mixed = solve(_requests(["dict", "array", "array", "dict", "array"]))
+    assert_reports_bitwise(mixed, refs, f"{mode} ndev={ndev} mixed")
+
+
+# -- continuous retire/refill: hypothesis property ---------------------------
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 6),
+    mat_idx=st.lists(st.integers(0, 2), min_size=6, max_size=6),
+    as_array=st.lists(st.booleans(), min_size=6, max_size=6),
+    tight=st.lists(st.booleans(), min_size=6, max_size=6),
+    zero_row=st.integers(-1, 5),
+)
+def test_continuous_mixed_forms_survive_retire_refill(
+    n, mat_idx, as_array, tight, zero_row
+):
+    """Random mixed dict/array workloads through the continuous engine:
+    replacing any subset of dict materials with their bitwise-equal
+    array twins must change (a) no report — iterations, flags, bitwise
+    solutions — and (b) no scheduling stat: the same refill count, the
+    same number of prepare() calls (prep-row reuse keys on field
+    content, so bitwise-equal heterogeneous rows short-circuit power
+    iterations exactly like repeated dicts), the same cheap row-copy
+    count.  Padding rows never surface: exactly the submitted tickets
+    come back."""
+
+    def reqs(use_arrays):
+        return [
+            SolveRequest(
+                p=1,
+                refine=1,
+                materials=(
+                    VOCAB_ARR[mat_idx[i]]
+                    if (use_arrays and as_array[i])
+                    else VOCAB[mat_idx[i]]
+                ),
+                traction=(0.0, 0.0, 0.0) if i == zero_row
+                else (0.0, 0.0, -1e-2 * (1 + 0.1 * i)),
+                rel_tol=1e-9 if tight[i] else 1e-4,
+                keep_solution=True,
+            )
+            for i in range(n)
+        ]
+
+    svc = _service(1)
+    base = dict(svc.stats)
+    refs = svc.solve_continuous(reqs(use_arrays=False))
+    d_dict = {k: svc.stats[k] - base[k] for k in
+              ("refills", "prep_calls", "prep_row_copies", "rebuckets")}
+    base = dict(svc.stats)
+    reps = svc.solve_continuous(reqs(use_arrays=True))
+    d_mix = {k: svc.stats[k] - base[k] for k in d_dict}
+    assert len(reps) == n and svc.idle() and not svc._completed
+    assert_reports_bitwise(reps, refs, f"hypothesis n={n}")
+    for i, r in enumerate(reps):
+        assert r.born_converged == (i == zero_row)
+    assert d_mix == d_dict
+
+
+def test_prep_reuse_engages_across_forms():
+    """Deterministic engagement check: an alternating dict/array stream
+    whose folded fields are all bitwise-equal pays prepare() exactly
+    once — every continuous refill (either form) copies the prepared
+    row — and still matches the generational reports."""
+    svc = ElasticityService(max_batch=2, chunk_iters=3, maxiter=MAXITER)
+    arr_a = material_fields(FINE, MATS_A)
+
+    def reqs():
+        return [
+            SolveRequest(
+                p=1, refine=1,
+                materials=arr_a if i % 2 else MATS_A,
+                rel_tol=1e-8,
+                traction=(0.0, 0.0, -1e-2 * (i + 1)),
+                keep_solution=True,
+            )
+            for i in range(6)
+        ]
+
+    reports = svc.solve_continuous(reqs())
+    assert all(r.converged for r in reports)
+    assert svc.stats["prep_calls"] == 1  # the initial batch only
+    assert svc.stats["prep_row_copies"] >= 4  # every refill reused
+    ref = ElasticityService(max_batch=2, maxiter=MAXITER).solve(reqs())
+    for rc, rg in zip(reports, ref):
+        assert rc.iterations == rg.iterations
+        np.testing.assert_array_equal(rc.x, rg.x)
+
+
+# -- genuinely heterogeneous fields ------------------------------------------
+def test_graded_field_converges_and_differs_from_homogenized():
+    """A graded ramp converges like any scenario, and its solution
+    genuinely differs from the arithmetic-homogenized constant field —
+    per-element resolution is real, not decorative."""
+    svc = _service(1)
+    ramp = np.linspace(50.0, 1.0, FINE.nelem)
+    const = np.full(FINE.nelem, ramp.mean())
+    rep_ramp, rep_const = svc.solve([
+        SolveRequest(p=1, refine=1, materials=(ramp, 0.8 * ramp),
+                     rel_tol=1e-8, keep_solution=True),
+        SolveRequest(p=1, refine=1, materials=(const, 0.8 * const),
+                     rel_tol=1e-8, keep_solution=True),
+    ])
+    assert rep_ramp.converged and rep_const.converged
+    assert rep_ramp.final_rel_norm <= 1e-8
+    diff = np.abs(rep_ramp.x - rep_const.x).max()
+    assert diff > 1e-3 * np.abs(rep_const.x).max()
+
+
+# -- operator-layer material forms -------------------------------------------
+def test_operator_accepts_mixed_scenario_sequences():
+    """ElasticityOperator normalizes every material form to per-element
+    fields: a sequence of (lam_e, mu_e) pairs is recognized per entry
+    (never mis-stacked as one pair), and dict/pair entries mix freely
+    with bitwise-identical weighted fields."""
+    from repro.core.operators import ElasticityOperator
+    from repro.fem.space import H1Space
+
+    sp = H1Space(beam_hex(2, 1, 1), 1)
+    pair = material_fields(sp.mesh, MATS_A)
+    by_dicts = ElasticityOperator(sp, materials=[MATS_A] * 3)
+    by_pairs = ElasticityOperator(sp, materials=[pair] * 3)
+    by_mixed = ElasticityOperator(sp, materials=[MATS_A, pair, pair])
+    assert by_pairs.nbatch == by_mixed.nbatch == 3
+    for op in (by_pairs, by_mixed):
+        np.testing.assert_array_equal(
+            np.asarray(op.lam_w), np.asarray(by_dicts.lam_w)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(op.mu_w), np.asarray(by_dicts.mu_w)
+        )
+    solo = ElasticityOperator(sp, materials=pair)
+    assert solo.nbatch is None  # a raw pair is one scenario, not two
+    # a length-2 sequence of 1-D pairs reads two ways with DIFFERENT
+    # lambda/mu pairings — it must refuse, not guess (either spelling)
+    for ambiguous in (
+        [pair, pair],
+        ([pair[0], pair[0]], [pair[1], pair[1]]),
+    ):
+        with pytest.raises(ValueError, match="ambiguous materials"):
+            ElasticityOperator(sp, materials=ambiguous)
+    # ... while the unambiguous numpy-stacked raw form still works
+    stacked = ElasticityOperator(
+        sp, materials=(np.stack([pair[0]] * 3), np.stack([pair[1]] * 3))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(stacked.lam_w), np.asarray(by_dicts.lam_w)
+    )
+    with pytest.raises(TypeError, match="sequence of dicts / pairs"):
+        ElasticityOperator(sp, materials="steel")
+
+
+# -- validation precision ----------------------------------------------------
+def test_submit_validation_names_the_offense():
+    svc = ElasticityService()
+    ne = FINE.nelem
+    ok = np.ones(ne)
+    with pytest.raises(ValueError, match=r"lam_e has shape \(63,\), "
+                                         r"expected \(64,\)"):
+        svc.submit(SolveRequest(p=1, refine=1,
+                                materials=(np.ones(63), ok)))
+    bad = ok.copy()
+    bad[17] = -2.0
+    with pytest.raises(ValueError, match=r"mu_e\[17\] = -2\.0 is not "
+                                         r"positive"):
+        svc.submit(SolveRequest(p=1, refine=1, materials=(ok, bad)))
+    nan = ok.copy()
+    nan[3] = np.nan
+    with pytest.raises(ValueError, match=r"lam_e\[3\]"):
+        svc.submit(SolveRequest(p=1, refine=1, materials=(nan, ok)))
+    with pytest.raises(ValueError, match=r"missing mesh attributes \[2\]"):
+        svc.submit(SolveRequest(p=1, refine=1, materials={1: (1.0, 1.0)}))
+    with pytest.raises(ValueError, match=r"attribute 2 has non-positive "
+                                         r"coefficients"):
+        svc.submit(SolveRequest(p=1, refine=1,
+                                materials={1: (1.0, 1.0), 2: (0.0, 1.0)}))
+    with pytest.raises(ValueError, match=r"attribute 1 must map to a "
+                                         r"\(lambda, mu\) pair"):
+        svc.submit(SolveRequest(p=1, refine=1,
+                                materials={1: 50.0, 2: (1.0, 1.0)}))
+    with pytest.raises(TypeError, match="dict or a .lam_e, mu_e. array"):
+        svc.submit(SolveRequest(p=1, refine=1, materials="steel"))
+    # the queue stayed clean: nothing was admitted
+    assert svc.idle()
+
+
+def test_pack_materials_validation_names_scenario():
+    solver = BatchedGMGSolver(beam_hex(), 1, 1, maxiter=MAXITER)
+    ne = solver.fine_space.nelem
+    with pytest.raises(ValueError, match=r"scenario 1 materials: lam_e "
+                                         r"has shape"):
+        solver.pack_materials([MATS_A, (np.ones(3), np.ones(3))])
+    with pytest.raises(ValueError, match="scenario 0 materials: missing "
+                                         "mesh attributes"):
+        solver.pack_materials([{1: (1.0, 1.0)}])
+    with pytest.raises(TypeError, match="scenario 2"):
+        solver.pack_materials([MATS_A, MATS_B, 7])
+    # the raw stacked (lam_2d, mu_2d) pair is NOT a scenario list —
+    # unpacking its rows would cross-pair lambda/mu across scenarios,
+    # so it must refuse loudly instead
+    lam2d = np.full((2, ne), 10.0)
+    mu2d = np.full((2, ne), 1.0)
+    with pytest.raises(TypeError, match="2-D array as a scenario entry"):
+        solver.pack_materials((lam2d, mu2d))
+    lam, mu = solver.pack_materials(list(zip(lam2d, mu2d)))  # the fix
+    np.testing.assert_array_equal(np.asarray(lam), lam2d)
+    np.testing.assert_array_equal(np.asarray(mu), mu2d)
+    lam, mu = solver.pack_materials([MATS_A, material_fields(FINE, MATS_A)])
+    np.testing.assert_array_equal(np.asarray(lam[0]), np.asarray(lam[1]))
+    assert lam.shape == (2, ne)
