@@ -13,7 +13,12 @@ mixed-tolerance workload (alternating loose/tight rel_tol): generational
 batching is gated by the slowest row of every generation, while
 continuous batching retires loose rows early, refills their slots from
 the queue, and lets the draining tail shrink to smaller padding buckets.
-Reports throughput and per-request tail latency for both.
+Reports throughput and per-request tail latency for both, plus the
+scheduler-stats columns (chunks dispatched, mean chunk length, wasted
+iterations) of the chosen ``--chunk-policy`` — fixed, adaptive
+(cadence-driven chunk lengths) or shard-adaptive (per-device cadence +
+placement); numerics are identical across policies, so the columns
+isolate pure scheduling effects (see docs/SCHEDULING.md).
 
 ``--devices N`` shards the scenario axis over N devices (forcing N
 virtual XLA host devices on CPU — set before backend init, which is why
@@ -32,6 +37,8 @@ arguments either way.
 
     PYTHONPATH=src python -m benchmarks.batched_throughput [--quick]
     PYTHONPATH=src python -m benchmarks.batched_throughput --continuous
+    PYTHONPATH=src python -m benchmarks.batched_throughput \
+        --continuous --chunk-policy adaptive
     PYTHONPATH=src python -m benchmarks.batched_throughput --devices 8 --continuous
     PYTHONPATH=src python -m benchmarks.batched_throughput --heterogeneous --quick
 """
@@ -188,13 +195,28 @@ def _time_generational(service, n: int, hetero: bool = False):
 
 def _time_continuous(service, n: int, hetero: bool = False):
     reqs = make_mixed_tol_requests(n, hetero=hetero)
+    before = {
+        k: service.stats[k]
+        for k in ("chunks", "chunk_iters_dispatched", "wasted_iters")
+    }
     t0 = time.perf_counter()
     reports = service.solve_continuous(reqs)
     dt = time.perf_counter() - t0
     assert all(r.converged for r in reports)
     assert all(r.final_rel_norm <= r.request.rel_tol for r in reports)
     assert len(reports) == n  # padding rows never surfaced
-    return dt, reports, [r.t_solve for r in reports]  # admission -> retirement
+    delta = {k: service.stats[k] - v for k, v in before.items()}
+    sched = {
+        "chunks": delta["chunks"],
+        "mean_chunk": (
+            delta["chunk_iters_dispatched"] / delta["chunks"]
+            if delta["chunks"]
+            else 0.0
+        ),
+        "wasted_iters": delta["wasted_iters"],
+    }
+    # admission -> retirement latency per request
+    return dt, reports, [r.t_solve for r in reports], sched
 
 
 def run_continuous(
@@ -202,10 +224,18 @@ def run_continuous(
     n_requests: int | None = None,
     repeats: int = 3,
     chunk_iters: int = 8,
+    chunk_policy: str = "fixed",
     mesh=None,
     hetero: bool = False,
 ) -> list[dict]:
     """Continuous vs generational on the mixed-tolerance workload.
+
+    ``chunk_policy`` selects the continuous engine's chunk scheduler
+    (fixed / adaptive / shard-adaptive — numerics are identical, so the
+    comparison isolates pure scheduling effects), and the continuous row
+    carries the scheduler counters: chunks dispatched, mean chosen chunk
+    length, and wasted iterations (slot-iterations near-converged rows
+    idled inside chunks).
 
     The repeats of the two policies are interleaved in time and each
     policy reports its best repeat: on a shared/throttled CPU a transient
@@ -216,7 +246,8 @@ def run_continuous(
     n = 2 * batch if n_requests is None else n_requests
     svc_gen = ElasticityService(max_batch=batch, mesh=mesh)
     svc_cont = ElasticityService(
-        max_batch=batch, chunk_iters=chunk_iters, mesh=mesh
+        max_batch=batch, chunk_iters=chunk_iters,
+        chunk_policy=chunk_policy, mesh=mesh,
     )
     # Warm: hierarchy build + one compile per (bucket, reset-flag) the
     # workload visits (16, 8, ... as the continuous tail drains).
@@ -224,25 +255,33 @@ def run_continuous(
     svc_cont.solve_continuous(make_mixed_tol_requests(n, hetero=hetero))
     runs_gen, runs_cont = [], []
     for _ in range(repeats):
-        runs_gen.append(_time_generational(svc_gen, n, hetero=hetero))
+        runs_gen.append(
+            _time_generational(svc_gen, n, hetero=hetero) + (None,)
+        )
         runs_cont.append(_time_continuous(svc_cont, n, hetero=hetero))
     rows = []
     for policy, runs in (
         ("generational", runs_gen),
-        (f"continuous(k={chunk_iters})", runs_cont),
+        (f"continuous({chunk_policy}, k={chunk_iters})", runs_cont),
     ):
         # throughput AND latencies from the same (best) repeat
-        t, reports, lat = min(runs, key=lambda r: r[0])
+        t, reports, lat, sched = min(runs, key=lambda r: r[0])
         p50, p95 = _latency_percentiles(lat)
-        rows.append(
-            {
-                "policy": policy,
-                "scenarios_per_s": _real_throughput(reports, t),
-                "t_workload_s": t,
-                "latency_p50_s": p50,
-                "latency_p95_s": p95,
-            }
-        )
+        row = {
+            "policy": policy,
+            "scenarios_per_s": _real_throughput(reports, t),
+            "t_workload_s": t,
+            "latency_p50_s": p50,
+            "latency_p95_s": p95,
+            "chunks": "-",
+            "mean_chunk": "-",
+            "wasted_iters": "-",
+        }
+        if sched is not None:
+            row["chunks"] = sched["chunks"]
+            row["mean_chunk"] = round(sched["mean_chunk"], 2)
+            row["wasted_iters"] = sched["wasted_iters"]
+        rows.append(row)
     rows[1]["speedup_vs_generational"] = (
         rows[1]["scenarios_per_s"] / rows[0]["scenarios_per_s"]
     )
@@ -283,7 +322,13 @@ def main() -> None:
     ap.add_argument("--n-requests", type=int, default=None,
                     help="workload size for --continuous (default 2*batch)")
     ap.add_argument("--chunk-iters", type=int, default=8,
-                    help="PCG iterations per continuous chunk")
+                    help="PCG iterations per continuous chunk (fixed "
+                         "policy) / no-history fallback (adaptive)")
+    ap.add_argument("--chunk-policy", default="fixed",
+                    choices=["fixed", "adaptive", "shard-adaptive"],
+                    help="chunk scheduler for --continuous (identical "
+                         "numerics; scheduler-stats columns show the "
+                         "chunks/waste difference)")
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--devices", type=int, default=None,
                     help="shard the scenario axis over N devices (forces "
@@ -313,6 +358,7 @@ def main() -> None:
             n_requests=args.n_requests,
             repeats=args.repeats,
             chunk_iters=args.chunk_iters,
+            chunk_policy=args.chunk_policy,
             mesh=mesh,
             hetero=args.heterogeneous,
         )
@@ -325,6 +371,9 @@ def main() -> None:
                     "t_workload_s",
                     "latency_p50_s",
                     "latency_p95_s",
+                    "chunks",
+                    "mean_chunk",
+                    "wasted_iters",
                     "speedup_vs_generational",
                 ],
                 title=(

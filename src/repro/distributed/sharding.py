@@ -78,6 +78,7 @@ __all__ = [
     "scenario_sharding",
     "pin_scenario",
     "device_put_scenario",
+    "scenario_row_devices",
     "force_host_device_count",
 ]
 
@@ -181,6 +182,25 @@ def device_put_scenario(tree: Any, mesh: Mesh | None) -> Any:
         return jax.device_put(x, scenario_sharding(mesh, nd))
 
     return jax.tree.map(put, tree)
+
+
+def scenario_row_devices(s: int, n_shards: int) -> np.ndarray:
+    """Device index owning each of ``s`` scenario rows under axis-0
+    scenario sharding: a 1-D ``NamedSharding`` splits the axis into
+    ``n_shards`` contiguous blocks of ``s // n_shards`` rows, so row
+    ``r`` lives on device ``r // (s // n_shards)``.  Pure host math (the
+    shard-aware chunk policy consumes it every step, so it must not
+    touch the device); ``s`` must divide the mesh, exactly as the
+    compiled programs require.  The multidevice suite checks this
+    against the actual ``Array.sharding`` layout so the two can never
+    silently diverge."""
+    if n_shards < 1:
+        raise ValueError(f"scenario_row_devices: n_shards must be >= 1, got {n_shards}")
+    if s % n_shards:
+        raise ValueError(
+            f"scenario_row_devices: {s} rows do not divide {n_shards} shards"
+        )
+    return np.arange(s) // max(s // n_shards, 1)
 
 
 def jnp_ndim(x) -> int:

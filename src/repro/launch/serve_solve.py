@@ -10,6 +10,10 @@ Usage:
         --n-requests 16 --max-batch 8 --p 2 --refine 1
     PYTHONPATH=src python -m repro.launch.serve_solve --p 1 2  # mixed keys
     PYTHONPATH=src python -m repro.launch.serve_solve --continuous
+    PYTHONPATH=src python -m repro.launch.serve_solve \
+        --continuous --chunk-policy adaptive   # cadence-driven chunks
+    PYTHONPATH=src python -m repro.launch.serve_solve \
+        --continuous --devices 4 --chunk-policy shard-adaptive
     PYTHONPATH=src python -m repro.launch.serve_solve --devices 4  # sharded
     PYTHONPATH=src python -m repro.launch.serve_solve \
         --material-field lognormal:7   # heterogeneous per-element fields
@@ -26,6 +30,13 @@ devices.  On a CPU-only host it forces N virtual XLA host devices
 (``--xla_force_host_platform_device_count``), which MUST happen before
 jax initializes its backend — hence the heavyweight imports live inside
 ``main``.
+
+``--chunk-policy {fixed,adaptive,shard-adaptive}`` selects how the
+continuous engine picks each chunk's PCG iteration count (and, for
+shard-adaptive, which device refills land on).  Scheduling never changes
+numerics — reports are identical across policies — and the run prints
+the scheduler counters (chunks dispatched, mean chunk length, wasted
+iterations); see docs/SCHEDULING.md.
 """
 
 from __future__ import annotations
@@ -126,7 +137,19 @@ def main() -> None:
                     help="continuous batching (slot refill + bucketed "
                          "padding) instead of generational")
     ap.add_argument("--chunk-iters", type=int, default=8,
-                    help="PCG iterations per continuous chunk")
+                    help="PCG iterations per continuous chunk (fixed "
+                         "policy) / no-history fallback (adaptive)")
+    ap.add_argument("--chunk-policy", default="fixed",
+                    choices=["fixed", "adaptive", "shard-adaptive"],
+                    help="continuous chunk scheduling: fixed chunk "
+                         "length, retire-cadence adaptive, or per-device "
+                         "cadence + shard-balanced refill placement "
+                         "(never changes numerics)")
+    ap.add_argument("--min-chunk", type=int, default=None,
+                    help="adaptive policies: chunk length lower clamp")
+    ap.add_argument("--max-chunk", type=int, default=None,
+                    help="adaptive policies: chunk length upper clamp "
+                         "(default 4 * chunk-iters)")
     ap.add_argument("--devices", type=int, default=None,
                     help="shard the scenario axis over N devices (forces "
                          "N virtual host devices on CPU)")
@@ -153,7 +176,8 @@ def main() -> None:
 
     service = ElasticityService(
         max_batch=args.max_batch, assembly=args.assembly,
-        chunk_iters=args.chunk_iters, mesh=mesh,
+        chunk_iters=args.chunk_iters, chunk_policy=args.chunk_policy,
+        min_chunk=args.min_chunk, max_chunk=args.max_chunk, mesh=mesh,
     )
     for round_i in range(args.repeat):
         reqs = make_workload(
@@ -188,6 +212,16 @@ def main() -> None:
                 f"{rows:>7} {rep.t_setup:>8.3f} {rep.t_solve:>8.3f}"
             )
     print(f"service stats: {service.stats}")
+    if args.continuous:
+        # Scheduler outcome of the chosen --chunk-policy: how many
+        # chunks were dispatched, their mean chosen length, and the
+        # slot-iterations near-converged rows idled inside chunks.
+        s = service.trace.summary()
+        print(
+            f"scheduler[{service.chunk_policy.name}]: "
+            f"chunks={s['chunks']} mean_chunk={s['mean_chunk']:.2f} "
+            f"wasted_iters={s['wasted_iters']} refills={s['refills']}"
+        )
 
 
 if __name__ == "__main__":

@@ -1,3 +1,13 @@
+from repro.serve.chunk_policy import (  # noqa: F401
+    AdaptiveChunkPolicy,
+    ChunkObservation,
+    ChunkPolicy,
+    FixedChunkPolicy,
+    SchedulerTrace,
+    ShardAdaptiveChunkPolicy,
+    make_chunk_policy,
+    simulate_cadence_trace,
+)
 from repro.serve.elasticity_service import (  # noqa: F401
     ElasticityService,
     SolveReport,

@@ -53,7 +53,21 @@ Shared machinery:
   the (S,) convergence vectors of a sharded state exactly as before
   (jax gathers them transparently), and device-padding rows are never
   surfaced.  ``SolveReport.padded_rows`` records the compiled program's
-  total row count so throughput accounting can exclude padding.
+  total row count so throughput accounting can exclude padding;
+* **chunk scheduling**: how many PCG iterations each continuous chunk
+  runs (and which free slot a refill lands in) is delegated to a
+  :class:`~repro.serve.chunk_policy.ChunkPolicy` — ``fixed`` (the
+  default, today's constant ``chunk_iters``), ``adaptive`` (chunk to
+  the retire cadence observed in the flight's history ring buffer) or
+  ``shard-adaptive`` (cadence per device + refills placed on the
+  least-loaded shard).  Policies NEVER change numerics — any policy
+  produces the same iteration counts, flags and (to machine precision)
+  solutions as ``fixed``, bitwise so when its decisions coincide; only
+  *when* rows retire/refill differs.  Every decision is recorded in
+  ``ElasticityService.trace`` (a replayable
+  :class:`~repro.serve.chunk_policy.SchedulerTrace`), and ``stats``
+  carries the scheduler counters (``chunks``, ``chunk_iters_dispatched``,
+  ``wasted_iters``, ``refills``).
 """
 
 from __future__ import annotations
@@ -61,7 +75,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import time
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from typing import Any
 
 import jax
@@ -73,7 +87,17 @@ from repro.core.geometry import (
     check_material_dict,
     check_material_fields,
 )
+from repro.distributed.sharding import scenario_row_devices
 from repro.fem.mesh import HexMesh, beam_hex
+from repro.serve.chunk_policy import (
+    HISTORY_LEN,
+    ChunkDecision,
+    ChunkObservation,
+    RefillPlacement,
+    SchedulerTrace,
+    make_chunk_policy,
+    wasted_iterations,
+)
 from repro.solvers.batched import BatchedGMGSolver, BpcgState
 
 __all__ = ["SolveRequest", "SolveReport", "ElasticityService"]
@@ -201,6 +225,20 @@ class _Flight:
         self.prep_mu = np.zeros((0, ne))
         self.pending_reset: np.ndarray | None = None
         self.chunks = 0
+        # Scheduling state the chunk policies feed on, all host-side:
+        # a ring buffer of recent retire cadences (iterations at
+        # retirement) and a per-row iteration mirror maintained from the
+        # consumed vectors run_chunk returns (reset rows go back to 0),
+        # so building a ChunkObservation costs no device fetch.  The
+        # consumed vector of the last dispatched chunk stays on device
+        # (pending_consumed) until the next retire pass — which fetches
+        # state anyway — so the policy adds no extra mid-flight syncs;
+        # last_decision is the trace record awaiting that outcome.
+        self.retire_history: deque[int] = deque(maxlen=HISTORY_LEN)
+        self.row_iters = np.zeros((0,), dtype=np.int64)
+        self.pending_refills: tuple[RefillPlacement, ...] = ()
+        self.pending_consumed: Any = None
+        self.last_decision: ChunkDecision | None = None
 
     def live_rows(self) -> list[int]:
         return [i for i, s in enumerate(self.slots) if s is not None]
@@ -220,14 +258,15 @@ class ElasticityService:
         maxiter: int = 200,
         pallas_interpret: bool = True,
         chunk_iters: int = 8,
+        chunk_policy=None,
+        min_chunk: int | None = None,
+        max_chunk: int | None = None,
         mesh=None,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if cache_size < 1:
             raise ValueError(f"cache_size must be >= 1, got {cache_size}")
-        if chunk_iters < 1:
-            raise ValueError(f"chunk_iters must be >= 1, got {chunk_iters}")
         self.max_batch = max_batch
         self.cache_size = cache_size
         self.assembly = assembly
@@ -235,6 +274,22 @@ class ElasticityService:
         self.maxiter = maxiter
         self.pallas_interpret = pallas_interpret
         self.chunk_iters = chunk_iters
+        # Chunk scheduling policy for the continuous path.  The old
+        # ``chunk_iters < 1`` check generalizes to the policy-bound
+        # validation inside make_chunk_policy (min_chunk <= max_chunk,
+        # both >= 1), so a bad bound fails HERE with a message naming
+        # the offending parameter, not mid-flight.
+        self.chunk_policy = make_chunk_policy(
+            chunk_policy,
+            chunk_iters=chunk_iters,
+            min_chunk=min_chunk,
+            max_chunk=max_chunk,
+        )
+        # Replayable record of recent scheduling decisions, bounded to
+        # the last 4096 (see repro.serve.chunk_policy.SchedulerTrace);
+        # the cumulative stats counters don't depend on the trimming.
+        self.trace = SchedulerTrace()
+        self._step_index = 0
         # Scenario-axis device mesh shared by every solver this service
         # builds (int = "first n devices"); see repro.distributed.sharding.
         from repro.distributed.sharding import normalize_scenario_mesh
@@ -250,6 +305,8 @@ class ElasticityService:
             "cache_misses": 0,
             "generations": 0,
             "chunks": 0,
+            "chunk_iters_dispatched": 0,
+            "wasted_iters": 0,
             "refills": 0,
             "rebuckets": 0,
             "prep_calls": 0,
@@ -373,8 +430,13 @@ class ElasticityService:
         in-flight discretization key: retire converged rows (their
         reports become drainable), refill freed slots from the queue,
         admit mid-flight submissions, and re-bucket each step program to
-        the smallest sufficient batch size.  Returns the number of
+        the smallest sufficient batch size.  The chunk length (and, for
+        the shard-adaptive policy, the refill placement) comes from
+        ``self.chunk_policy``; every flight with live rows dispatches
+        exactly one chunk per step — no flight is ever starved — and
+        every decision lands in ``self.trace``.  Returns the number of
         requests completed by this step."""
+        self._step_index += 1
         done_before = len(self._completed)
         qgroups: OrderedDict[tuple, list[tuple[int, SolveRequest]]] = (
             OrderedDict()
@@ -439,9 +501,30 @@ class ElasticityService:
         self.run_until_idle()
         return [self._completed.pop(t) for t in tickets]
 
+    def _finalize_chunk(self, flight: _Flight) -> None:
+        """Fold the last chunk's consumed vector into the host-side
+        scheduling state: advance the per-row iteration mirror and patch
+        the awaiting trace record (consumed, wasted slot-iterations).
+        Runs at the retire pass — the first point the host touches the
+        device state anyway — so the policy costs no extra syncs."""
+        if flight.pending_consumed is None:
+            return
+        consumed = np.asarray(flight.pending_consumed)
+        flight.pending_consumed = None
+        flight.row_iters += consumed.astype(np.int64)
+        d = flight.last_decision
+        flight.last_decision = None
+        if d is not None:
+            d.consumed = tuple(int(c) for c in consumed)
+            d.wasted = wasted_iterations(consumed, d.live_slots)
+            self.stats["wasted_iters"] += d.wasted
+
     def _retire(self, flight: _Flight) -> None:
         """Emit reports for rows that stopped iterating (converged or hit
-        maxiter) during the previous chunk and free their slots."""
+        maxiter) during the previous chunk and free their slots,
+        recording each real row's retire cadence in the flight's history
+        ring buffer (the adaptive policies' signal)."""
+        self._finalize_chunk(flight)
         if flight.chunks == 0 or flight.state is None:
             return
         active = np.asarray(flight.state.active)
@@ -484,6 +567,11 @@ class ElasticityService:
                 else None,
             )
             flight.slots[i] = None
+            # Retire cadence for the policies: total iterations this row
+            # ran before retiring.  Born-converged rows (0 iterations)
+            # teach nothing about cadence and are skipped.
+            if iters[i] > 0:
+                flight.retire_history.append(int(iters[i]))
 
     def _admit(
         self, flight: _Flight, queued: list[tuple[int, SolveRequest]]
@@ -512,6 +600,7 @@ class ElasticityService:
             flight.prep_digest = np.zeros((bucket,), dtype=object)
             flight.prep_lam = np.zeros((bucket, ne))
             flight.prep_mu = np.zeros((bucket, ne))
+            flight.row_iters = np.zeros((bucket,), dtype=np.int64)
             flight.bucket = bucket
             reset = np.ones((bucket,), dtype=bool)
         elif bucket != flight.bucket:
@@ -536,6 +625,7 @@ class ElasticityService:
             flight.prep_digest = flight.prep_digest[idx]
             flight.prep_lam = flight.prep_lam[idx]
             flight.prep_mu = flight.prep_mu[idx]
+            flight.row_iters = flight.row_iters[idx]
             flight.bucket = bucket
             reset = np.zeros((bucket,), dtype=bool)
             reset[n_live:] = True
@@ -545,8 +635,20 @@ class ElasticityService:
 
         admitted: set[int] = set()
         free = [i for i, s in enumerate(flight.slots) if s is None]
+        # Refill placement is a policy decision: the default policies
+        # fill ascending slot indices (the pre-policy behavior); the
+        # shard-adaptive policy targets the least-loaded device so
+        # retires drain whole shards as early as possible.  Placement
+        # never changes numerics — rows are slot-independent.
+        slot_devs = scenario_row_devices(flight.bucket, self.n_shards)
+        order = self.chunk_policy.placement(
+            free,
+            [int(d) for d in slot_devs],
+            [int(slot_devs[i]) for i in flight.live_rows()],
+        )
+        refills: list[RefillPlacement] = []
         now = time.perf_counter()
-        for (ticket, req), row in zip(take, free):
+        for (ticket, req), row in zip(take, order):
             if flight.slots[row] is not None:  # pragma: no cover
                 raise AssertionError(f"slot {row} double-assigned")
             flight.slots[row] = _Slot(ticket, req, now)
@@ -560,6 +662,11 @@ class ElasticityService:
             flight.tol[row] = req.rel_tol
             reset[row] = True
             admitted.add(ticket)
+            refills.append(
+                RefillPlacement(
+                    ticket=ticket, slot=row, device=int(slot_devs[row])
+                )
+            )
             self.stats["refills"] += 1
         # Padding rows being reset borrow a real row's materials (keeps
         # the batched operators SPD) with a zero traction: b == 0 makes
@@ -576,6 +683,7 @@ class ElasticityService:
                     flight.tr[row] = 0.0
                     flight.tol[row] = 1e-6
         flight.pending_reset = reset if reset.any() else None
+        flight.pending_refills = tuple(refills)
         return admitted
 
     def _refresh_prep(self, flight: _Flight, reset: np.ndarray) -> None:
@@ -631,27 +739,56 @@ class ElasticityService:
 
     def _launch_chunk(self, flight: _Flight) -> None:
         """One bounded advance of the flight's compiled step program,
-        re-initializing any rows flagged by the last admit."""
+        re-initializing any rows flagged by the last admit.  The chunk
+        length comes from the policy's view of the in-flight mix (the
+        host-side iteration mirror, the per-device row map and the
+        retire-history ring buffer); the decision is appended to
+        ``self.trace`` and completed by the next retire pass."""
         solver = flight.solver
         reset = flight.pending_reset
         do_reset = reset is not None
         if do_reset:
             self._refresh_prep(flight, reset)
+            flight.row_iters[reset] = 0
         mask = (
             reset if do_reset else np.zeros((flight.bucket,), dtype=bool)
         )
-        flight.state = solver.run_chunk(
+        live = flight.live_rows()
+        slot_devs = scenario_row_devices(flight.bucket, self.n_shards)
+        obs = ChunkObservation(
+            live_iters=tuple(int(flight.row_iters[i]) for i in live),
+            live_devices=tuple(int(slot_devs[i]) for i in live),
+            history=tuple(flight.retire_history),
+            bucket=flight.bucket,
+            n_devices=self.n_shards,
+        )
+        k = self.chunk_policy.chunk_for(obs)
+        flight.state, flight.pending_consumed = solver.run_chunk(
             flight.tr,
             flight.tol,
             mask,
             flight.state,
             flight.prep,
-            self.chunk_iters,
+            k,
             do_reset=do_reset,
         )
+        decision = ChunkDecision(
+            step=self._step_index,
+            key=flight.key,
+            policy=self.chunk_policy.name,
+            bucket=flight.bucket,
+            observation=obs,
+            chunk=k,
+            refills=flight.pending_refills,
+            live_slots=tuple(live),
+        )
+        self.trace.append(decision)
+        flight.last_decision = decision
+        flight.pending_refills = ()
         flight.pending_reset = None
         flight.chunks += 1
         self.stats["chunks"] += 1
+        self.stats["chunk_iters_dispatched"] += k
 
     # -- generational batching -----------------------------------------------
     def solve(self, requests: list[SolveRequest] | None = None) -> list[SolveReport]:

@@ -34,7 +34,9 @@ requests:
   per-scenario data (smoother diagonals + lambda_max, the coarse
   Cholesky factor) for exactly the reset rows; ``run_chunk`` rebuilds
   the hierarchy from that prep pytree (no power iterations, no
-  refactorization) and advances the state by ``k`` iterations.  The
+  refactorization), advances the state by ``k`` iterations and reports
+  the per-row iterations consumed (the retire-cadence signal the
+  adaptive chunk policies in :mod:`repro.serve.chunk_policy` use).  The
   monolithic ``solve`` is the same machinery run to completion in one
   call.  Re-solving with new scenario data hits the compiled programs —
   no retrace, no hierarchy rebuild.
@@ -713,16 +715,21 @@ class BatchedGMGSolver:
     def _chunk_impl(
         self, tractions, rel_tol, reset_mask, state, prep, k_iters,
         *, do_reset: bool,
-    ) -> BpcgState:
+    ) -> tuple[BpcgState, Any]:
         state, prep = self._pin(state), self._pin(prep)
         levels, gmg = self._build_from_prep(prep)
         A = levels[-1].constrained
         if do_reset:
             fresh = bpcg_init(A, self._rhs(tractions), M=gmg, rel_tol=rel_tol)
             state = merge_states(reset_mask, fresh, state)
-        return self._pin(
-            bpcg_chunk(A, state, M=gmg, k_iters=k_iters, maxiter=self.maxiter)
+        start_iters = state.iters
+        out = bpcg_chunk(
+            A, state, M=gmg, k_iters=k_iters, maxiter=self.maxiter
         )
+        # Per-row iterations consumed by THIS chunk: the scheduling
+        # policies read retire cadence from this (S,) vector, so the
+        # host never has to fetch the full state mid-flight.
+        return self._pin(out), self._pin(out.iters - start_iters)
 
     def _solve_impl(self, lam_vals, mu_vals, tractions, rel_tol):
         s = lam_vals.shape[0]
@@ -811,7 +818,7 @@ class BatchedGMGSolver:
     def run_chunk(
         self, tractions, rel_tol, reset_mask, state, prep, k_iters,
         *, do_reset: bool = False,
-    ) -> BpcgState:
+    ) -> tuple[BpcgState, Any]:
         """Jitted: advance the batch by up to ``k_iters`` iterations.
         With ``do_reset`` the masked rows are first re-initialized for
         their (new) tractions/tolerances: x = 0, r = b, fresh thresholds,
@@ -821,7 +828,13 @@ class BatchedGMGSolver:
         divide the device mesh when sharded — padding rows are the
         caller's job (see :meth:`pad_scenarios`).  ``k_iters`` is a
         runtime argument — any chunk length reuses the same compiled
-        program."""
+        program.
+
+        Returns ``(state, consumed)`` where ``consumed`` is the (S,)
+        int32 count of iterations each row executed inside this chunk
+        (0 for rows that entered inactive).  It is the cadence signal
+        the adaptive chunk policies feed on: one small vector instead of
+        an extra mid-flight fetch of the full state."""
         tractions = jnp.asarray(tractions, self.dtype)
         self._check_batch(int(tractions.shape[0]), "run_chunk")
         rel = jnp.broadcast_to(

@@ -158,14 +158,22 @@ def test_solver_chunked_matches_monolithic(small_solver):
 
     lam, mu = solver.pack_materials(mats)
     prep = solver.prepare(lam, mu, np.ones(2, bool), solver.empty_prep(2))
-    state = solver.run_chunk(
+    state, consumed = solver.run_chunk(
         tr, 1e-8, np.ones(2, bool), solver.empty_state(2), prep, 4,
         do_reset=True,
     )
+    # consumed mirrors the per-row iteration delta of the chunk
+    np.testing.assert_array_equal(
+        np.asarray(consumed), np.asarray(state.iters)
+    )
     guard = 0
     while bool(jnp.any(state.active)):
-        state = solver.run_chunk(
+        prev = np.asarray(state.iters)
+        state, consumed = solver.run_chunk(
             tr, 1e-8, np.zeros(2, bool), state, prep, 4, do_reset=False
+        )
+        np.testing.assert_array_equal(
+            np.asarray(consumed), np.asarray(state.iters) - prev
         )
         guard += 1
         assert guard < 100
@@ -187,7 +195,7 @@ def test_solver_refill_row_matches_fresh_solve(small_solver):
     tr = np.array([[0.0, 0.0, -1e-2], [0.0, 1e-3, -2e-2]])
     lam, mu = solver.pack_materials(mats)
     prep = solver.prepare(lam, mu, np.ones(2, bool), solver.empty_prep(2))
-    state = solver.run_chunk(
+    state, _ = solver.run_chunk(
         tr, 1e-8, np.ones(2, bool), solver.empty_state(2), prep, 3,
         do_reset=True,
     )
@@ -197,10 +205,10 @@ def test_solver_refill_row_matches_fresh_solve(small_solver):
     lam2, mu2 = solver.pack_materials(mats2)
     mask = np.array([True, False])
     prep = solver.prepare(lam2, mu2, mask, prep)
-    state = solver.run_chunk(tr2, 1e-8, mask, state, prep, 3, do_reset=True)
+    state, _ = solver.run_chunk(tr2, 1e-8, mask, state, prep, 3, do_reset=True)
     guard = 0
     while bool(jnp.any(state.active)):
-        state = solver.run_chunk(
+        state, _ = solver.run_chunk(
             tr2, 1e-8, np.zeros(2, bool), state, prep, 3, do_reset=False
         )
         guard += 1
@@ -393,6 +401,123 @@ def test_prep_row_reuse_skips_power_iterations():
         assert rc.iterations == rg.iterations
         scale = max(np.abs(rg.x).max(), 1e-30)
         np.testing.assert_allclose(rc.x, rg.x, atol=1e-8 * scale)
+
+
+# -- scheduler invariants under random interleavings -------------------------
+_SCHED_SERVICES: dict = {}
+
+
+def _sched_service(policy: str) -> ElasticityService:
+    """One service per policy, shared across hypothesis examples (the
+    compiled programs are paid for once); every example drains fully, so
+    only the cumulative counters carry over — tests use deltas.  A
+    service left non-idle by a failing example is discarded, so later
+    examples (and hypothesis shrinking) never see its leftovers."""
+    svc = _SCHED_SERVICES.get(policy)
+    if svc is not None and not svc.idle():
+        svc = None  # poisoned by a failed example: rebuild
+    if svc is None:
+        svc = _SCHED_SERVICES[policy] = ElasticityService(
+            max_batch=2, chunk_iters=2, chunk_policy=policy
+        )
+    svc.drain()  # discard any completed-but-undrained leftovers
+    return svc
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    policy=st.sampled_from(["fixed", "adaptive", "shard-adaptive"]),
+    n_upfront=st.integers(1, 3),
+    arrivals=st.lists(st.integers(0, 2), min_size=0, max_size=4),
+    mat_idx=st.lists(st.integers(0, 2), min_size=7, max_size=7),
+    tight=st.lists(st.booleans(), min_size=7, max_size=7),
+)
+def test_scheduler_no_starvation_and_stats_match_trace(
+    policy, n_upfront, arrivals, mat_idx, tight
+):
+    """Random submit/step interleavings (slots retire and refill at
+    arbitrary points) under every policy:
+
+    * no live row is ever starved — every flight holding live rows
+      dispatches exactly one chunk per ``step()`` (checked against the
+      trace's per-step decisions);
+    * every chunk choice respects the policy bounds;
+    * the scheduler counters (``chunks``, ``chunk_iters_dispatched``,
+      ``wasted_iters``, ``refills``) are exactly the trace's sums —
+      stats can never drift from the replayable record."""
+    service = _sched_service(policy)
+    base = {
+        k: service.stats[k]
+        for k in (
+            "chunks", "chunk_iters_dispatched", "wasted_iters", "refills"
+        )
+    }
+    # Fresh trace per example: the record is bounded (maxlen trimming
+    # drops the OLDEST decisions), so index-based slicing across shared
+    # examples would eventually skew — clearing keeps exactly this
+    # example's decisions while the cumulative stats counters (compared
+    # as deltas) are unaffected.
+    service.trace.clear()
+    reqs = [
+        SolveRequest(
+            p=1,
+            refine=0,
+            materials=(MATS_A, MATS_B, MATS_C)[mat_idx[i]],
+            traction=(0.0, 0.0, -1e-2 * (i + 1)),
+            rel_tol=1e-10 if tight[i] else 1e-4,
+        )
+        for i in range(len(mat_idx))
+    ]
+    it = iter(reqs)
+    submitted = 0
+
+    def step_and_check():
+        service.step()
+        decided = {
+            d.key for d in service.trace.decisions
+            if d.step == service._step_index
+        }
+        # every flight still holding live rows was dispatched this step
+        for key, flight in service._flights.items():
+            assert not flight.live_rows() or key in decided, (
+                f"flight {key} starved at step {service._step_index}"
+            )
+
+    for _ in range(n_upfront):
+        service.submit(next(it))
+        submitted += 1
+    for k in arrivals:
+        step_and_check()
+        for _ in range(k):
+            try:
+                service.submit(next(it))
+                submitted += 1
+            except StopIteration:
+                break
+    guard = 0
+    while not service.idle():
+        step_and_check()
+        guard += 1
+        assert guard < 500
+    done = service.drain()
+    assert len(done) == submitted  # exactly one report per request
+    assert all(r.converged for r in done)
+
+    decisions = service.trace.decisions
+    pol = service.chunk_policy
+    for d in decisions:
+        assert pol.min_chunk <= d.chunk <= pol.max_chunk
+        assert d.wasted >= 0
+        assert len(d.consumed) == d.bucket  # outcome was finalized
+    delta = {k: service.stats[k] - v for k, v in base.items()}
+    assert delta["chunks"] == len(decisions)
+    assert delta["chunk_iters_dispatched"] == sum(d.chunk for d in decisions)
+    assert delta["wasted_iters"] == sum(d.wasted for d in decisions)
+    assert delta["refills"] == sum(len(d.refills) for d in decisions)
+    # the recorded observations replay to the recorded choices
+    assert [pol.chunk_for(d.observation) for d in decisions] == [
+        d.chunk for d in decisions
+    ]
 
 
 def test_continuous_lru_eviction_fires_at_capacity():

@@ -51,7 +51,9 @@ def test_docs_exist_and_have_snippets():
     architecture and materials pages exist and carry executable
     examples."""
     names = {p.name for p in DOC_FILES}
-    assert {"README.md", "ARCHITECTURE.md", "MATERIALS.md"} <= names
+    assert {
+        "README.md", "ARCHITECTURE.md", "MATERIALS.md", "SCHEDULING.md"
+    } <= names
     by_file = {}
     for param in SNIPPETS:
         by_file.setdefault(param.id.split(":")[0], 0)
@@ -59,6 +61,7 @@ def test_docs_exist_and_have_snippets():
     assert by_file.get("README.md", 0) >= 1
     assert by_file.get("docs/ARCHITECTURE.md", 0) >= 2
     assert by_file.get("docs/MATERIALS.md", 0) >= 4
+    assert by_file.get("docs/SCHEDULING.md", 0) >= 5
 
 
 @pytest.mark.docs

@@ -154,12 +154,13 @@ def _chunked_solve(solver: BatchedGMGSolver, mats, tr, tol, k: int):
     lam, mu = solver.pack_materials(mats)
     reset = np.ones((n,), dtype=bool)
     prep = solver.prepare(lam, mu, reset, solver.empty_prep(n))
-    state = solver.run_chunk(
+    state, consumed = solver.run_chunk(
         tr, tol, reset, solver.empty_state(n), prep, k, do_reset=True
     )
+    assert consumed.shape == (n,)  # per-row cadence signal rides along
     guard = 0
     while bool(np.asarray(state.active).any()):
-        state = solver.run_chunk(
+        state, _ = solver.run_chunk(
             tr, tol, np.zeros((n,), dtype=bool), state, prep, k
         )
         guard += 1
@@ -201,7 +202,7 @@ def test_sharded_state_and_prep_are_actually_distributed():
     lam, mu = solver.pack_materials(mats)
     reset = np.ones((n,), dtype=bool)
     prep = solver.prepare(lam, mu, reset, solver.empty_prep(n))
-    state = solver.run_chunk(
+    state, _ = solver.run_chunk(
         tr, tol, reset, solver.empty_state(n), prep, 2, do_reset=True
     )
     def assert_sharded(x):
@@ -460,4 +461,4 @@ def test_batched_throughput_devices_cli_end_to_end():
     )
     assert res.returncode == 0, res.stderr[-2000:]
     assert "scenario mesh: 8 devices (8 visible)" in res.stdout
-    assert "continuous(k=4)" in res.stdout
+    assert "continuous(fixed, k=4)" in res.stdout
