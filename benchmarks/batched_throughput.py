@@ -171,10 +171,16 @@ def make_mixed_tol_requests(
 
 
 def _latency_percentiles(latencies: list[float]) -> tuple[float, float]:
-    return (
-        float(np.percentile(latencies, 50)),
-        float(np.percentile(latencies, 95)),
-    )
+    """p50/p95 through the obs histogram quantile estimator — the SAME
+    implementation the service's ``latency_summary()`` reports, so the
+    benchmark's tail-latency columns and the serving summary can never
+    drift apart (this replaced an ad-hoc np.percentile on raw lists)."""
+    from repro.obs.metrics import Histogram, default_latency_edges
+
+    h = Histogram(default_latency_edges())
+    for v in latencies:
+        h.observe(v)
+    return h.quantile(0.5), h.quantile(0.95)
 
 
 def _time_generational(service, n: int, hetero: bool = False):
@@ -309,6 +315,57 @@ def run(
     return rows
 
 
+SERVING_SCHEMA = "repro.bench.serving/v1"
+
+
+def write_serving_artifact(rows: list[dict], args, out: str) -> None:
+    """BENCH_serving.json: the continuous-vs-generational comparison as
+    a schema-versioned artifact (``repro.bench.serving/v1``), validated
+    against the checked-in schema BEFORE writing.  Scheduler columns are
+    null for the generational row (the table prints '-')."""
+    import json
+    import os
+
+    from repro.obs.schema import validate_json
+
+    def _num(v):
+        return None if v == "-" else v
+
+    doc = {
+        "schema": SERVING_SCHEMA,
+        "benchmark": "batched_throughput",
+        "generated_unix": time.time(),
+        "workload": {
+            "p": P,
+            "refine": REFINE,
+            "batch": args.batch,
+            "n_requests": args.n_requests or 2 * args.batch,
+            "chunk_iters": args.chunk_iters,
+            "chunk_policy": args.chunk_policy,
+            "devices": args.devices or 1,
+            "heterogeneous": bool(args.heterogeneous),
+            "repeats": args.repeats,
+        },
+        "rows": [
+            {
+                **{k: v for k, v in r.items()},
+                "chunks": _num(r["chunks"]),
+                "mean_chunk": _num(r["mean_chunk"]),
+                "wasted_iters": _num(r["wasted_iters"]),
+            }
+            for r in rows
+        ],
+    }
+    schema_path = os.path.join(
+        os.path.dirname(__file__), "schemas", "bench_serving.schema.json"
+    )
+    with open(schema_path) as f:
+        validate_json(doc, json.load(f))
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
@@ -336,6 +393,10 @@ def main() -> None:
     ap.add_argument("--heterogeneous", action="store_true",
                     help="per-element lognormal (lam_e, mu_e) random "
                          "fields instead of attribute dicts")
+    ap.add_argument("--bench-out", default=None, metavar="PATH",
+                    help="with --continuous: write the comparison as a "
+                         "schema-versioned BENCH_serving.json artifact "
+                         "(validated before writing)")
     args = ap.parse_args()
 
     # Env must be set before anything touches the jax backend.
@@ -384,6 +445,9 @@ def main() -> None:
                 ),
             )
         )
+        if args.bench_out:
+            write_serving_artifact(rows, args, args.bench_out)
+            print(f"artifact -> {args.bench_out}")
         return
     rows = run(
         fast=args.fast, quick=args.quick, mesh=mesh,

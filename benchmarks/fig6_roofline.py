@@ -5,6 +5,12 @@ Reads the dry-run artifacts (runs/dryrun/elasticity__*.json) produced by
 per cell against the TPU v5e ceilings, plus the OI trajectory PA -> PAop
 computed analytically (Table 5's counts over the streaming-bytes model).
 Falls back to analytic-only output if no dry-run artifacts exist yet.
+
+When a ``BENCH_operator_sweep.json`` artifact exists (produced by
+``python -m benchmarks.operator_sweep``), its MEASURED batched-operator
+rows are placed on the same roofline — analytic OI on the x-axis,
+measured FLOP/s over the OI-allowed roof as the achieved fraction — so
+the analytic trajectory and the measured trajectory print side by side.
 """
 
 from __future__ import annotations
@@ -15,7 +21,7 @@ import os
 
 from benchmarks.common import fmt_table
 from benchmarks.table5_flops import analytic_flops_per_elem
-from repro.launch.roofline import V5E
+from repro.launch.roofline import V5E, place_measured
 
 
 def analytic_rows(ps=(1, 2, 4, 8), itemsize=4):
@@ -59,6 +65,35 @@ def dryrun_rows(dryrun_dir="runs/dryrun"):
     return rows
 
 
+def measured_rows(artifact="BENCH_operator_sweep.json"):
+    """Measured operator-sweep rows placed on the v5e roofline (empty
+    list when the artifact hasn't been produced yet).  The artifact is
+    schema-validated on read — fig6 consumes the same contract the
+    bench-smoke CI lane enforces."""
+    if not os.path.exists(artifact):
+        return []
+    from benchmarks.validate_bench import validate_file
+
+    doc = validate_file(artifact)
+    rows = []
+    for r in doc["rows"]:
+        placed = place_measured(
+            flops_per_apply=r["flops_per_apply"],
+            bytes_per_apply=r["bytes_per_apply"],
+            t_apply_s=r["t_apply_s"],
+        )
+        rows.append({
+            "p": r["p"],
+            "batch": r["batch"],
+            "dofs_per_s": r["dofs_per_s"],
+            "gbytes_per_s": r["gbytes_per_s"],
+            "oi_measured_at": placed.oi,
+            "v5e_roof_fraction": placed.fraction,
+            "v5e_bound": placed.bound,
+        })
+    return rows
+
+
 def main(fast: bool = False):
     arows = analytic_rows()
     print(fmt_table(
@@ -77,7 +112,21 @@ def main(fast: bool = False):
         ))
     else:
         print("\n(no dry-run artifacts found; run python -m repro.launch.dryrun)")
-    return arows + drows
+    mrows = measured_rows()
+    if mrows:
+        print()
+        print(fmt_table(
+            mrows,
+            ["p", "batch", "dofs_per_s", "gbytes_per_s", "oi_measured_at",
+             "v5e_roof_fraction", "v5e_bound"],
+            title="Measured batched operator on the v5e roofline "
+                  "(BENCH_operator_sweep.json; CPU-interpret numbers — "
+                  "trajectory, not absolute)",
+        ))
+    else:
+        print("\n(no BENCH_operator_sweep.json; run "
+              "python -m benchmarks.operator_sweep)")
+    return arows + drows + mrows
 
 
 if __name__ == "__main__":

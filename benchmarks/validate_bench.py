@@ -1,0 +1,77 @@
+"""Validate BENCH_*.json artifacts against their checked-in schemas.
+
+The bench-smoke CI lane runs this after producing the artifacts; a
+schema drift (renamed field, wrong type, vanished row) fails CI with the
+exact offending path instead of silently shipping an artifact the next
+perf comparison can't consume.
+
+The schema is inferred from the document's own ``schema`` field
+(``repro.bench.<name>/v<N>`` -> ``benchmarks/schemas/
+bench_<name>.schema.json``); ``--schema`` overrides.
+
+    PYTHONPATH=src python -m benchmarks.validate_bench BENCH_*.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+SCHEMA_DIR = os.path.join(os.path.dirname(__file__), "schemas")
+
+
+def schema_path_for(doc: dict) -> str:
+    """benchmarks/schemas/ path for a document's declared schema id."""
+    sid = doc.get("schema")
+    if not isinstance(sid, str) or not sid.startswith("repro.bench."):
+        raise ValueError(
+            f"document carries no recognizable schema id (got {sid!r}); "
+            f"pass --schema explicitly"
+        )
+    name = sid[len("repro.bench."):].split("/", 1)[0]
+    path = os.path.join(SCHEMA_DIR, f"bench_{name}.schema.json")
+    if not os.path.exists(path):
+        raise FileNotFoundError(
+            f"no checked-in schema for {sid!r} (expected {path})"
+        )
+    return path
+
+
+def validate_file(artifact: str, schema: str | None = None) -> dict:
+    """Validate one artifact; returns the parsed document or raises
+    :class:`repro.obs.schema.SchemaError` naming every violation."""
+    from repro.obs.schema import validate_json
+
+    with open(artifact) as f:
+        doc = json.load(f)
+    with open(schema or schema_path_for(doc)) as f:
+        validate_json(doc, json.load(f))
+    return doc
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("artifacts", nargs="+", help="BENCH_*.json paths")
+    ap.add_argument("--schema", default=None,
+                    help="explicit schema path (default: inferred from "
+                         "the document's schema field)")
+    args = ap.parse_args()
+
+    from repro.obs.schema import SchemaError
+
+    failed = False
+    for path in args.artifacts:
+        try:
+            doc = validate_file(path, args.schema)
+        except (SchemaError, ValueError, FileNotFoundError) as e:
+            failed = True
+            print(f"FAIL {path}: {e}")
+            continue
+        print(f"ok   {path} ({doc['schema']}, {len(doc.get('rows', []))} rows)")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

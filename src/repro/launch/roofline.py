@@ -44,6 +44,8 @@ __all__ = [
     "collective_bytes",
     "roofline_from_artifacts",
     "RooflineTerms",
+    "MeasuredPlacement",
+    "place_measured",
 ]
 
 
@@ -195,6 +197,58 @@ def model_flops_estimate(arch: str, shape_name: str, meta: dict) -> float:
         toks = shape.seq_len * shape.global_batch
         return 2.0 * n * toks
     return 2.0 * n * shape.global_batch  # decode: one token per row
+
+
+@dataclasses.dataclass(frozen=True)
+class MeasuredPlacement:
+    """A *measured* operator apply placed on the roofline: its analytic
+    operational intensity, the roof that OI allows on the target
+    hardware, and the fraction of it the measurement achieved.
+
+    Unlike :class:`RooflineTerms` (three *predicted* time terms from a
+    compiled artifact), this starts from a wall-clock measurement —
+    ``benchmarks/operator_sweep.py`` produces one per
+    ``BENCH_operator_sweep.json`` row — so ``fraction`` compares reality
+    against the model instead of model against model.  On this CPU
+    container fractions are tiny; the point is the *trajectory* as perf
+    PRs land, measured against a fixed target roof."""
+
+    oi: float  # analytic FLOPs/byte of the measured apply
+    achieved_flops: float  # model FLOPs / measured seconds (FLOP/s)
+    achieved_bw: float  # model streamed bytes / measured seconds (B/s)
+    roof_flops: float  # min(peak, oi * hbm_bw) * chips (FLOP/s)
+    fraction: float  # achieved_flops / roof_flops
+    bound: str  # which ceiling binds at this OI: "memory" | "compute"
+    hw: HardwareSpec
+
+
+def place_measured(
+    *,
+    flops_per_apply: float,
+    bytes_per_apply: float,
+    t_apply_s: float,
+    chips: int = 1,
+    hw: HardwareSpec = V5E,
+) -> MeasuredPlacement:
+    """Place one measured operator apply against ``hw``'s roofline.
+    ``flops_per_apply`` / ``bytes_per_apply`` are the analytic models
+    (paper kernel FLOPs and streaming bytes); ``t_apply_s`` the fenced
+    wall time of one apply."""
+    if t_apply_s <= 0:
+        raise ValueError(f"t_apply_s must be > 0, got {t_apply_s}")
+    if bytes_per_apply <= 0:
+        raise ValueError(f"bytes_per_apply must be > 0, got {bytes_per_apply}")
+    oi = flops_per_apply / bytes_per_apply
+    roof = min(hw.peak_flops, oi * hw.hbm_bw) * chips
+    return MeasuredPlacement(
+        oi=oi,
+        achieved_flops=flops_per_apply / t_apply_s,
+        achieved_bw=bytes_per_apply / t_apply_s,
+        roof_flops=roof,
+        fraction=(flops_per_apply / t_apply_s) / roof,
+        bound="memory" if oi * hw.hbm_bw < hw.peak_flops else "compute",
+        hw=hw,
+    )
 
 
 def roofline_from_artifacts(

@@ -17,6 +17,8 @@ Usage:
     PYTHONPATH=src python -m repro.launch.serve_solve --devices 4  # sharded
     PYTHONPATH=src python -m repro.launch.serve_solve \
         --material-field lognormal:7   # heterogeneous per-element fields
+    PYTHONPATH=src python -m repro.launch.serve_solve --continuous \
+        --metrics-out metrics.prom --trace-out trace.json  # observability
 
 ``--material-field {graded,checkerboard,lognormal[:seed]}`` replaces the
 attribute-dict materials with per-element ``(lam_e, mu_e)`` coefficient
@@ -37,6 +39,13 @@ shard-adaptive, which device refills land on).  Scheduling never changes
 numerics — reports are identical across policies — and the run prints
 the scheduler counters (chunks dispatched, mean chunk length, wasted
 iterations); see docs/SCHEDULING.md.
+
+``--metrics-out`` dumps the service's metrics registry (Prometheus text,
+or a JSON snapshot for ``.json`` paths); ``--trace-out`` attaches a
+device-fencing span recorder and writes a Chrome ``trace_event`` file
+viewable at https://ui.perfetto.dev; ``--events-out`` writes the same
+spans as JSON-lines.  A latency-quantile summary line (p50/p90/p99 from
+the registry histogram) prints either way; see docs/OBSERVABILITY.md.
 """
 
 from __future__ import annotations
@@ -157,6 +166,16 @@ def main() -> None:
                     metavar="{graded,checkerboard,lognormal[:seed]}",
                     help="heterogeneous per-element (lam_e, mu_e) fields "
                          "instead of attribute dicts")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the service metrics registry as a "
+                         "Prometheus text dump (.prom/.txt) or JSON "
+                         "snapshot (.json)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record request/chunk spans (device-fenced) and "
+                         "write a Chrome trace_event file — open it at "
+                         "https://ui.perfetto.dev")
+    ap.add_argument("--events-out", default=None, metavar="PATH",
+                    help="also write the spans as a JSON-lines event log")
     args = ap.parse_args()
 
     # Env must be set before anything touches the jax backend.
@@ -174,10 +193,16 @@ def main() -> None:
         print(f"scenario mesh: {mesh.devices.size} devices "
               f"({jax.device_count()} visible)")
 
+    spans = None
+    if args.trace_out or args.events_out:
+        from repro.obs import SpanRecorder
+
+        spans = SpanRecorder()
     service = ElasticityService(
         max_batch=args.max_batch, assembly=args.assembly,
         chunk_iters=args.chunk_iters, chunk_policy=args.chunk_policy,
         min_chunk=args.min_chunk, max_chunk=args.max_chunk, mesh=mesh,
+        spans=spans,
     )
     for round_i in range(args.repeat):
         reqs = make_workload(
@@ -222,6 +247,31 @@ def main() -> None:
             f"chunks={s['chunks']} mean_chunk={s['mean_chunk']:.2f} "
             f"wasted_iters={s['wasted_iters']} refills={s['refills']}"
         )
+    lat = service.latency_summary()
+    if lat:
+        print(
+            f"latency: p50={lat['p50']:.3f}s p90={lat['p90']:.3f}s "
+            f"p99={lat['p99']:.3f}s mean={lat['mean']:.3f}s "
+            f"(n={int(lat['count'])})"
+        )
+    if args.metrics_out:
+        if args.metrics_out.endswith(".json"):
+            with open(args.metrics_out, "w") as f:
+                f.write(service.registry.to_json(indent=2))
+        else:
+            with open(args.metrics_out, "w") as f:
+                f.write(service.registry.to_prometheus_text())
+        print(f"metrics -> {args.metrics_out}")
+    if spans is not None:
+        if args.trace_out:
+            spans.to_chrome_trace(args.trace_out)
+            print(
+                f"trace -> {args.trace_out} "
+                f"({spans.count()} spans; open at https://ui.perfetto.dev)"
+            )
+        if args.events_out:
+            spans.to_jsonl(args.events_out)
+            print(f"events -> {args.events_out}")
 
 
 if __name__ == "__main__":

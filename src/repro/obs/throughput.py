@@ -1,0 +1,158 @@
+"""Kernel-level operator-apply throughput on the batched path.
+
+Measures what the paper's Fig. 5 measures — operator applications per
+second, expressed as DoF/s — but on the *batched* operator the serving
+stack actually runs: S scenarios' material fields folded into the
+element axis of one :class:`~repro.core.operators.ElasticityOperator`,
+exactly as ``BatchedGMGSolver`` binds them inside a solve.  Next to the
+wall measurement it evaluates the paper's analytic models so every row
+carries its own roofline placement:
+
+* ``flops_per_apply`` — :func:`repro.core.flops.paop_flops_per_elem`
+  (or the dense-baseline count) x elements;
+* ``bytes_per_apply`` — the PAop streaming-bytes model (read ``x_e``,
+  ``lam_w``, ``mu_w``; write ``y_e``; B/G tables and intermediates
+  on-chip, paper Sec. 4.5) — the same model ``fig6_roofline`` uses;
+* ``oi_model`` = flops / bytes, the analytic operational intensity the
+  measured point is placed against.
+
+Timing is device-fenced: every timed call ends in
+``jax.block_until_ready``, so asynchronous dispatch cannot leak compute
+into a later measurement.  Feeds ``benchmarks/operator_sweep.py``, which
+wraps rows into the schema-versioned ``BENCH_operator_sweep.json``
+artifact (the perf trajectory's first points).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flops import dense_flops_per_elem, paop_flops_per_elem
+
+__all__ = [
+    "streaming_bytes_per_elem",
+    "model_flops_per_elem",
+    "operator_throughput",
+]
+
+
+def streaming_bytes_per_elem(p: int, itemsize: int) -> int:
+    """PAop streaming-bytes model per element per apply: the 3-channel
+    ``x_e`` read + ``y_e`` write (D^3 nodes) and the two weighted
+    material fields (Q^3 points).  Basis tables and all intermediates
+    are on-chip by construction (paper Sec. 4.5)."""
+    D, Q = p + 1, p + 2
+    return itemsize * (2 * 3 * D**3 + 2 * Q**3)
+
+
+def model_flops_per_elem(p: int, assembly: str) -> float:
+    """Analytic per-element FLOPs of one operator apply for the
+    assembly family being measured (sum-factorized vs dense baseline)."""
+    if assembly == "pa_baseline":
+        return dense_flops_per_elem(p)
+    return paop_flops_per_elem(p)
+
+
+def _fenced_median_time(fn, x, *, warmup: int, repeats: int,
+                        min_time_s: float, clock=time.perf_counter) -> float:
+    """Median wall seconds per call, each sample fenced with
+    ``block_until_ready`` (dispatch + device compute, never dispatch
+    alone)."""
+    for _ in range(max(warmup, 1)):
+        jax.block_until_ready(fn(x))
+    times = []
+    for _ in range(max(repeats, 1)):
+        n = 0
+        t0 = clock()
+        while True:
+            jax.block_until_ready(fn(x))
+            n += 1
+            dt = clock() - t0
+            if dt >= min_time_s:
+                break
+        times.append(dt / n)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def _scenario_materials(n: int) -> list[dict]:
+    """The beam benchmark's mixed material vocabulary (same family the
+    serving benchmarks use), one dict per scenario row."""
+    return [
+        {1: (50.0 + 5.0 * (i % 3), 50.0), 2: (1.0 + 0.5 * (i % 2), 1.0)}
+        for i in range(n)
+    ]
+
+
+def operator_throughput(
+    p: int,
+    refine: int,
+    batch: int,
+    *,
+    assembly: str = "paop",
+    dtype=jnp.float64,
+    repeats: int = 3,
+    min_time_s: float = 0.05,
+    pallas_interpret: bool = True,
+    coarse_mesh=None,
+    clock=time.perf_counter,
+) -> dict[str, Any]:
+    """Measure batched operator-apply throughput for one (p, refine,
+    batch) cell; returns one artifact row (plain JSON-able dict).
+
+    The operator is built exactly like a solve level: S scenario
+    material dicts folded to per-element fields on the fine mesh of
+    ``coarse_mesh`` (beam default) refined ``refine`` times, applied to
+    a random (S, nscalar, 3) L-vector under jit."""
+    from repro.core.operators import ElasticityOperator
+    from repro.fem.mesh import beam_hex
+    from repro.fem.space import H1Space
+
+    mesh = (coarse_mesh if coarse_mesh is not None else beam_hex()).refined(
+        refine
+    )
+    space = H1Space(mesh, p)
+    op = ElasticityOperator(
+        space,
+        assembly=assembly,
+        materials=_scenario_materials(batch),
+        dtype=dtype,
+        pallas_interpret=pallas_interpret,
+    )
+    x = jax.random.normal(
+        jax.random.PRNGKey(p * 1000 + refine * 10 + batch),
+        (batch, space.nscalar, 3),
+        dtype,
+    )
+    t = _fenced_median_time(
+        jax.jit(op.apply), x,
+        warmup=1, repeats=repeats, min_time_s=min_time_s, clock=clock,
+    )
+
+    itemsize = jnp.dtype(dtype).itemsize
+    nelem = space.nelem * batch  # folded scenario-element axis
+    dofs = space.ndof * batch
+    bytes_per_apply = streaming_bytes_per_elem(p, itemsize) * nelem
+    flops_per_apply = model_flops_per_elem(p, assembly) * nelem
+    return {
+        "p": int(p),
+        "refine": int(refine),
+        "batch": int(batch),
+        "assembly": assembly,
+        "dtype": str(jnp.dtype(dtype)),
+        "ndof": int(space.ndof),
+        "nelem": int(space.nelem),
+        "dofs": int(dofs),
+        "t_apply_s": float(t),
+        "dofs_per_s": float(dofs / t),
+        "gdofs_per_s": float(dofs / t / 1e9),
+        "bytes_per_apply": int(bytes_per_apply),
+        "gbytes_per_s": float(bytes_per_apply / t / 1e9),
+        "flops_per_apply": float(flops_per_apply),
+        "gflops_per_s": float(flops_per_apply / t / 1e9),
+        "oi_model": float(flops_per_apply / bytes_per_apply),
+    }

@@ -67,7 +67,17 @@ Shared machinery:
   ``ElasticityService.trace`` (a replayable
   :class:`~repro.serve.chunk_policy.SchedulerTrace`), and ``stats``
   carries the scheduler counters (``chunks``, ``chunk_iters_dispatched``,
-  ``wasted_iters``, ``refills``).
+  ``wasted_iters``, ``refills``);
+* **observability**: every counter lives on a typed
+  :class:`repro.obs.metrics.MetricsRegistry` (labeled by
+  ``(p, refine, policy, devices)``; ``stats`` is a read-only legacy
+  view), request latency and queue wait feed registry histograms
+  (``latency_summary()`` reports the merged quantiles), and attaching a
+  :class:`repro.obs.spans.SpanRecorder` (``attach_spans``) records the
+  full request lifecycle — submit→admit→prep→chunk*→retire — with
+  device-fenced per-chunk timing, exportable as a Chrome trace and a
+  JSON-lines event log.  The service clock is injectable for
+  deterministic tests.  Catalog: ``docs/OBSERVABILITY.md``.
 """
 
 from __future__ import annotations
@@ -76,6 +86,7 @@ import dataclasses
 import hashlib
 import time
 from collections import OrderedDict, deque
+from collections.abc import Mapping
 from typing import Any
 
 import jax
@@ -98,9 +109,56 @@ from repro.serve.chunk_policy import (
     make_chunk_policy,
     wasted_iterations,
 )
+from repro.obs.metrics import MetricsRegistry
 from repro.solvers.batched import BatchedGMGSolver, BpcgState
 
 __all__ = ["SolveRequest", "SolveReport", "ElasticityService"]
+
+# Help text for the service counter families.  The keys double as the
+# legacy ``ElasticityService.stats`` vocabulary: each maps to the
+# ``service_<key>_total`` counter family on the registry, labeled by
+# (p, refine, policy, devices).
+_STAT_HELP = {
+    "cache_hits": "Solver LRU cache hits.",
+    "cache_misses": "Solver LRU cache misses (hierarchy + program builds).",
+    "generations": "Generational batches solved.",
+    "chunks": "Continuous chunks dispatched.",
+    "chunk_iters_dispatched": "PCG iterations dispatched across chunks.",
+    "wasted_iters": "Dispatched slot-iterations no live row consumed.",
+    "refills": "Freed slots refilled from the queue.",
+    "rebuckets": "In-flight state re-bucketings.",
+    "prep_calls": "prepare() calls (power iterations + refactorization).",
+    "prep_row_copies": "Prep rows reused via content-digest match.",
+}
+
+
+class _StatsView(Mapping):
+    """Read-only legacy view of the service counters.
+
+    ``ElasticityService.stats`` used to be a plain dict of ints; it is
+    now this Mapping over the metrics registry — same keys, same int
+    values (each key summed across every (p, refine, policy, devices)
+    label set), so ``svc.stats["chunks"]`` and ``dict(svc.stats)`` read
+    exactly as before.  Writes go through the registry, never here."""
+
+    _KEYS = tuple(_STAT_HELP)
+
+    def __init__(self, registry: MetricsRegistry):
+        self._registry = registry
+
+    def __getitem__(self, key: str) -> int:
+        if key not in self._KEYS:
+            raise KeyError(key)
+        return int(self._registry.total(f"service_{key}_total"))
+
+    def __iter__(self):
+        return iter(self._KEYS)
+
+    def __len__(self) -> int:
+        return len(self._KEYS)
+
+    def __repr__(self) -> str:
+        return repr(dict(self))
 
 
 @dataclasses.dataclass
@@ -185,22 +243,33 @@ class SolveReport:
 
 @dataclasses.dataclass
 class _Slot:
-    """A live batch row: which request occupies it and since when."""
+    """A live batch row: which request occupies it and since when.
+
+    ``t_submit`` carries the ticket's enqueue time so retirement can
+    attribute queue wait; ``t_compute`` / ``t_padding`` accumulate this
+    row's share of device-fenced chunk time and of the padding fraction
+    of it (only maintained while a fencing SpanRecorder is attached)."""
 
     ticket: int
     request: SolveRequest
     t_admit: float
+    t_submit: float = 0.0
+    t_compute: float = 0.0
+    t_padding: float = 0.0
 
 
 class _Flight:
     """In-flight continuous batch for one discretization key: the
     resumable solver state plus host-side slot bookkeeping."""
 
-    def __init__(self, key, solver, cache_hit, t_setup):
+    def __init__(self, key, solver, cache_hit, t_setup, tid_base=0):
         self.key = key
         self.solver = solver
         self.cache_hit = cache_hit
         self.t_setup = t_setup
+        # Chrome-trace track block: the flight's prep/chunk spans go on
+        # ``tid_base``; slot i's queue_wait/solve spans on tid_base+1+i.
+        self.tid_base = tid_base
         self.bucket = 0
         self.slots: list[_Slot | None] = []
         # Folded (bucket, nelem_fine) per-element material fields —
@@ -262,6 +331,9 @@ class ElasticityService:
         min_chunk: int | None = None,
         max_chunk: int | None = None,
         mesh=None,
+        registry: MetricsRegistry | None = None,
+        spans=None,
+        clock=time.perf_counter,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
@@ -300,18 +372,64 @@ class ElasticityService:
         self._flights: dict[tuple, _Flight] = {}
         self._completed: dict[int, SolveReport] = {}
         self._next_ticket = 0
-        self.stats = {
-            "cache_hits": 0,
-            "cache_misses": 0,
-            "generations": 0,
-            "chunks": 0,
-            "chunk_iters_dispatched": 0,
-            "wasted_iters": 0,
-            "refills": 0,
-            "rebuckets": 0,
-            "prep_calls": 0,
-            "prep_row_copies": 0,
+        # Observability: every counter the service used to keep in a
+        # plain ``stats`` dict now lives on a typed metrics registry,
+        # labeled by (p, refine, policy, devices); ``stats`` is a
+        # read-only view so existing readers see the same keys/values.
+        # ``clock`` is injectable for deterministic span/latency tests.
+        self.clock = clock
+        self.registry = (
+            registry if registry is not None else MetricsRegistry()
+        )
+        self.stats = _StatsView(self.registry)
+        self.spans = None
+        self._t_submit: dict[int, float] = {}
+        self._next_flight_idx = 0
+        if spans is not None:
+            self.attach_spans(spans)
+
+    # -- observability -------------------------------------------------------
+    def attach_spans(self, recorder) -> None:
+        """Install a :class:`repro.obs.spans.SpanRecorder`.  With
+        ``recorder.fence`` set, every continuous chunk is fenced with
+        ``jax.block_until_ready`` on the returned state — separating
+        host dispatch from device compute WITHOUT fetching the deferred
+        consumed vector (fencing waits; the fetch still rides the next
+        retire pass).  With no recorder attached the service adds no
+        fences and no per-chunk timing at all."""
+        self.spans = recorder
+        recorder.thread_name(0, "engine")
+
+    def _labels(self, key: tuple) -> dict:
+        """The uniform service label set for a discretization key."""
+        return {
+            "p": key[0],
+            "refine": key[1],
+            "policy": self.chunk_policy.name,
+            "devices": self.n_shards,
         }
+
+    def _inc(self, stat: str, key: tuple, n: int = 1) -> None:
+        self.registry.counter(
+            f"service_{stat}_total", _STAT_HELP[stat], **self._labels(key)
+        ).inc(n)
+
+    def _observe(self, name: str, help: str, key: tuple, v: float) -> None:
+        self.registry.histogram(name, help, **self._labels(key)).observe(v)
+
+    def latency_summary(
+        self, qs: tuple[float, ...] = (0.5, 0.9, 0.99)
+    ) -> dict[str, float]:
+        """Request-latency quantiles merged across every label set —
+        the one percentile implementation the benchmark and the CLI
+        summary both report (empty dict before any request finished)."""
+        h = self.registry.merged_histogram("request_latency_seconds")
+        if h is None or h.count == 0:
+            return {}
+        out = {f"p{round(q * 100):02d}": h.quantile(q) for q in qs}
+        out["mean"] = h.sum / h.count
+        out["count"] = float(h.count)
+        return out
 
     # -- queue ---------------------------------------------------------------
     @staticmethod
@@ -375,6 +493,7 @@ class ElasticityService:
                 )
         ticket = self._next_ticket
         self._next_ticket += 1
+        self._t_submit[ticket] = self.clock()
         self._queue.append((ticket, request))
         return ticket
 
@@ -395,9 +514,9 @@ class ElasticityService:
         """(solver, cache_hit, t_setup) for a discretization key."""
         if key in self._solvers:
             self._solvers.move_to_end(key)
-            self.stats["cache_hits"] += 1
+            self._inc("cache_hits", key)
             return self._solvers[key], True, 0.0
-        t0 = time.perf_counter()
+        t0 = self.clock()
         cmesh = req.coarse_mesh if req.coarse_mesh is not None else beam_hex()
         solver = BatchedGMGSolver(
             cmesh,
@@ -410,7 +529,7 @@ class ElasticityService:
             mesh=self.mesh,
         )
         self._solvers[key] = solver
-        self.stats["cache_misses"] += 1
+        self._inc("cache_misses", key)
         while len(self._solvers) > self.cache_size:
             evicted, _ = self._solvers.popitem(last=False)  # LRU eviction
             if evicted in self._flights:
@@ -422,7 +541,7 @@ class ElasticityService:
                     if k not in self._flights:
                         del self._solvers[k]
                         break
-        return solver, False, time.perf_counter() - t0
+        return solver, False, self.clock() - t0
 
     # -- continuous batching -------------------------------------------------
     def step(self) -> int:
@@ -437,6 +556,8 @@ class ElasticityService:
         every decision lands in ``self.trace``.  Returns the number of
         requests completed by this step."""
         self._step_index += 1
+        rec = self.spans
+        t_step0 = self.clock() if rec is not None else 0.0
         done_before = len(self._completed)
         qgroups: OrderedDict[tuple, list[tuple[int, SolveRequest]]] = (
             OrderedDict()
@@ -451,8 +572,15 @@ class ElasticityService:
             queued = qgroups.get(key, [])
             if flight is None:
                 solver, hit, t_setup = self._solver_for(key, queued[0][1])
-                flight = _Flight(key, solver, hit, t_setup)
+                flight = _Flight(
+                    key, solver, hit, t_setup, tid_base=self._flight_tid()
+                )
                 self._flights[key] = flight
+                if rec is not None:
+                    rec.thread_name(
+                        flight.tid_base,
+                        f"flight p={key[0]} refine={key[1]}",
+                    )
             self._retire(flight)
             if not flight.live_rows() and not queued:
                 del self._flights[key]
@@ -466,7 +594,27 @@ class ElasticityService:
             self._queue = [
                 (t, r) for t, r in self._queue if t not in admitted
             ]
-        return len(self._completed) - done_before
+        completed = len(self._completed) - done_before
+        if rec is not None:
+            rec.emit(
+                "step",
+                cat="engine",
+                tid=0,
+                start=t_step0,
+                end=self.clock(),
+                step=self._step_index,
+                completed=completed,
+            )
+        return completed
+
+    def _flight_tid(self) -> int:
+        """Next flight's Chrome-trace track block: tid 0 is the engine;
+        each flight takes a block of consecutive tids (the flight track
+        plus one per possible slot, slots bounded by the device-aligned
+        bucket, which may exceed max_batch by up to n_shards-1)."""
+        idx = self._next_flight_idx
+        self._next_flight_idx += 1
+        return 1 + idx * (self.max_batch + self.n_shards + 1)
 
     def idle(self) -> bool:
         """True when no requests are queued or in flight."""
@@ -517,7 +665,7 @@ class ElasticityService:
         if d is not None:
             d.consumed = tuple(int(c) for c in consumed)
             d.wasted = wasted_iterations(consumed, d.live_slots)
-            self.stats["wasted_iters"] += d.wasted
+            self._inc("wasted_iters", flight.key, d.wasted)
 
     def _retire(self, flight: _Flight) -> None:
         """Emit reports for rows that stopped iterating (converged or hit
@@ -534,7 +682,8 @@ class ElasticityService:
         iters = np.asarray(flight.state.iters)
         live = flight.live_rows()
         ndof = flight.solver.fine_space.ndof
-        now = time.perf_counter()
+        now = self.clock()
+        rec = self.spans
         for i in live:
             if active[i]:
                 continue
@@ -546,6 +695,33 @@ class ElasticityService:
                 if nom0[i] > 0
                 else 0.0
             )
+            wall = now - slot.t_admit
+            self._observe(
+                "request_latency_seconds",
+                "Admission-to-retirement latency per request.",
+                flight.key,
+                wall,
+            )
+            if rec is not None:
+                # Lifecycle identity per ticket: queue_wait + compute +
+                # overhead == submit-to-retire wall, exactly (compute is
+                # this row's share of device-fenced chunk time; overhead
+                # is everything else — host scheduling, dispatch,
+                # retire/refill bookkeeping).
+                rec.emit(
+                    "solve",
+                    cat="request",
+                    tid=flight.tid_base + 1 + i,
+                    start=slot.t_admit,
+                    end=now,
+                    ticket=slot.ticket,
+                    iterations=int(iters[i]),
+                    converged=converged,
+                    queue_wait=slot.t_admit - slot.t_submit,
+                    compute=slot.t_compute,
+                    overhead=wall - slot.t_compute,
+                    padding_overhead=slot.t_padding,
+                )
             self._completed[slot.ticket] = SolveReport(
                 request=req,
                 key=flight.key,
@@ -629,7 +805,7 @@ class ElasticityService:
             flight.bucket = bucket
             reset = np.zeros((bucket,), dtype=bool)
             reset[n_live:] = True
-            self.stats["rebuckets"] += 1
+            self._inc("rebuckets", flight.key)
         else:
             reset = np.zeros((bucket,), dtype=bool)
 
@@ -647,11 +823,30 @@ class ElasticityService:
             [int(slot_devs[i]) for i in flight.live_rows()],
         )
         refills: list[RefillPlacement] = []
-        now = time.perf_counter()
+        now = self.clock()
+        rec = self.spans
         for (ticket, req), row in zip(take, order):
             if flight.slots[row] is not None:  # pragma: no cover
                 raise AssertionError(f"slot {row} double-assigned")
-            flight.slots[row] = _Slot(ticket, req, now)
+            t_submit = self._t_submit.pop(ticket, now)
+            flight.slots[row] = _Slot(ticket, req, now, t_submit=t_submit)
+            self._observe(
+                "request_queue_wait_seconds",
+                "Submit-to-admission wait per request.",
+                flight.key,
+                now - t_submit,
+            )
+            if rec is not None:
+                tid = flight.tid_base + 1 + row
+                rec.thread_name(tid, f"p={flight.key[0]} slot {row}")
+                rec.emit(
+                    "queue_wait",
+                    cat="request",
+                    tid=tid,
+                    start=t_submit,
+                    end=now,
+                    ticket=ticket,
+                )
             lam, mu = solver.pack_materials([_req_materials(req)])
             flight.lam[row] = np.asarray(lam[0])
             flight.mu[row] = np.asarray(mu[0])
@@ -667,7 +862,7 @@ class ElasticityService:
                     ticket=ticket, slot=row, device=int(slot_devs[row])
                 )
             )
-            self.stats["refills"] += 1
+            self._inc("refills", flight.key)
         # Padding rows being reset borrow a real row's materials (keeps
         # the batched operators SPD) with a zero traction: b == 0 makes
         # them born-converged, so they cost 0 bpcg iterations and are
@@ -695,6 +890,8 @@ class ElasticityService:
         only on materials); only genuinely new material configurations
         pay the ``prepare`` power iterations + refactorization."""
         solver = flight.solver
+        rec = self.spans
+        t_prep0 = self.clock() if rec is not None else 0.0
         src_rows, dst_rows, unresolved = [], [], []
         sources = [s for s in range(flight.bucket) if flight.prep_valid[s]]
         for r in np.flatnonzero(reset):
@@ -721,7 +918,7 @@ class ElasticityService:
             flight.prep = solver.copy_prep_rows(
                 flight.prep, src_rows, dst_rows
             )
-            self.stats["prep_row_copies"] += len(dst_rows)
+            self._inc("prep_row_copies", flight.key, len(dst_rows))
         if unresolved:
             mask = np.zeros((flight.bucket,), dtype=bool)
             mask[unresolved] = True
@@ -731,11 +928,22 @@ class ElasticityService:
                 mask,
                 flight.prep,
             )
-            self.stats["prep_calls"] += 1
+            self._inc("prep_calls", flight.key)
         flight.prep_valid[reset] = True
         flight.prep_digest[reset] = flight.mat_digest[reset]
         flight.prep_lam[reset] = flight.lam[reset]
         flight.prep_mu[reset] = flight.mu[reset]
+        if rec is not None:
+            rec.emit(
+                "prep",
+                cat="flight",
+                tid=flight.tid_base,
+                start=t_prep0,
+                end=self.clock(),
+                rows_reset=int(reset.sum()),
+                rows_copied=len(dst_rows),
+                rows_prepared=len(unresolved),
+            )
 
     def _launch_chunk(self, flight: _Flight) -> None:
         """One bounded advance of the flight's compiled step program,
@@ -763,6 +971,8 @@ class ElasticityService:
             n_devices=self.n_shards,
         )
         k = self.chunk_policy.chunk_for(obs)
+        rec = self.spans
+        t0 = self.clock() if rec is not None else 0.0
         flight.state, flight.pending_consumed = solver.run_chunk(
             flight.tr,
             flight.tol,
@@ -772,6 +982,56 @@ class ElasticityService:
             k,
             do_reset=do_reset,
         )
+        if rec is not None:
+            t_dispatched = self.clock()
+            rec.emit(
+                "chunk_dispatch",
+                cat="chunk",
+                tid=flight.tid_base,
+                start=t0,
+                end=t_dispatched,
+                chunk=k,
+                bucket=flight.bucket,
+                live=len(live),
+            )
+            if rec.fence:
+                # Fence, don't fetch: block_until_ready waits for the
+                # chunk's computation (state AND the consumed vector it
+                # shares a program with) without transferring anything —
+                # the deferred consumed fetch still happens at the next
+                # retire pass, exactly as without instrumentation.
+                jax.block_until_ready(flight.state)
+                t_done = self.clock()
+                dt_dev = t_done - t_dispatched
+                rec.emit(
+                    "chunk_device",
+                    cat="chunk",
+                    tid=flight.tid_base,
+                    start=t_dispatched,
+                    end=t_done,
+                    chunk=k,
+                    bucket=flight.bucket,
+                    live=len(live),
+                )
+                self._observe(
+                    "chunk_device_seconds",
+                    "Device-fenced wall time per continuous chunk.",
+                    flight.key,
+                    dt_dev,
+                )
+                # Attribute this chunk's device time to the rows that
+                # rode it: each live ticket accrues the full chunk wall
+                # as compute, plus its per-ticket share of the padding
+                # fraction (padded rows / bucket) as padding overhead.
+                n_live = len(live)
+                pad_share = (
+                    dt_dev * (flight.bucket - n_live) / flight.bucket / n_live
+                    if n_live
+                    else 0.0
+                )
+                for i in live:
+                    flight.slots[i].t_compute += dt_dev
+                    flight.slots[i].t_padding += pad_share
         decision = ChunkDecision(
             step=self._step_index,
             key=flight.key,
@@ -787,8 +1047,8 @@ class ElasticityService:
         flight.pending_refills = ()
         flight.pending_reset = None
         flight.chunks += 1
-        self.stats["chunks"] += 1
-        self.stats["chunk_iters_dispatched"] += k
+        self._inc("chunks", flight.key)
+        self._inc("chunk_iters_dispatched", flight.key, k)
 
     # -- generational batching -----------------------------------------------
     def solve(self, requests: list[SolveRequest] | None = None) -> list[SolveReport]:
@@ -805,6 +1065,8 @@ class ElasticityService:
             for r in requests:
                 self.submit(r)
         pending = [r for _, r in self._queue]
+        for t, _ in self._queue:
+            self._t_submit.pop(t, None)
         self._queue = []
 
         # Group by discretization key, preserving submission order.
@@ -848,11 +1110,29 @@ class ElasticityService:
             n=n_real + n_pad,
         )
 
-        t0 = time.perf_counter()
+        t0 = self.clock()
         res = solver.solve(materials, tractions, rel_tols)
         x = res.x.block_until_ready()
-        t_solve = time.perf_counter() - t0
-        self.stats["generations"] += 1
+        t_solve = self.clock() - t0
+        self._inc("generations", key)
+        for _ in reqs:
+            self._observe(
+                "request_latency_seconds",
+                "Admission-to-retirement latency per request.",
+                key,
+                t_solve,
+            )
+        if self.spans is not None:
+            self.spans.emit(
+                "generation",
+                cat="generation",
+                tid=0,
+                start=t0,
+                end=t0 + t_solve,
+                generation=generation,
+                batch=n_real,
+                padded_rows=n_real + n_pad,
+            )
 
         iters = np.asarray(res.iterations)
         conv = np.asarray(res.converged)
