@@ -84,6 +84,8 @@ def measured_rows(artifact="BENCH_operator_sweep.json"):
         )
         rows.append({
             "p": r["p"],
+            "assembly": r["assembly"],
+            "pallas_lane": r.get("pallas_lane", "none"),
             "batch": r["batch"],
             "dofs_per_s": r["dofs_per_s"],
             "gbytes_per_s": r["gbytes_per_s"],
@@ -117,11 +119,12 @@ def main(fast: bool = False):
         print()
         print(fmt_table(
             mrows,
-            ["p", "batch", "dofs_per_s", "gbytes_per_s", "oi_measured_at",
-             "v5e_roof_fraction", "v5e_bound"],
+            ["p", "assembly", "pallas_lane", "batch", "dofs_per_s",
+             "gbytes_per_s", "oi_measured_at", "v5e_roof_fraction",
+             "v5e_bound"],
             title="Measured batched operator on the v5e roofline "
-                  "(BENCH_operator_sweep.json; CPU-interpret numbers — "
-                  "trajectory, not absolute)",
+                  "(BENCH_operator_sweep.json; lane column is the lane "
+                  "that ran — trajectory, not absolute)",
         ))
     else:
         print("\n(no BENCH_operator_sweep.json; run "

@@ -3,14 +3,20 @@
 The first artifact of the repo's perf trajectory: measured DoF/s of the
 *batched* elasticity operator (S scenarios' materials folded into the
 element axis — the apply the serving stack actually runs) swept over
-p in {1, 2, 4, 8}, with every row carrying the analytic models it is
-judged against: the paper-kernel FLOP count, the PAop streaming-bytes
-model, the resulting operational intensity, and the row's placement on
-the TPU v5e roofline (``repro.launch.roofline.place_measured``).
+p in {1, 2, 4, 6, 8} and over the Pallas lanes: per p, one ``paop``
+einsum baseline row plus one ``paop_pallas`` row per requested lane
+(``interpret`` and ``compiled`` by default).  Every row carries the
+analytic models it is judged against — the paper-kernel FLOP count, the
+PAop streaming-bytes model, the resulting operational intensity, and
+the row's placement on the TPU v5e roofline
+(``repro.launch.roofline.place_measured``) — plus the lane that
+*actually ran*: ``pallas_lane`` is the operator's resolved lane, so a
+``compiled`` request on a backend that cannot lower Pallas is recorded
+as the interpret run it really was (``lane_requested`` keeps the ask).
 
-Absolute numbers on this container are CPU + interpret-mode Pallas —
-tiny, and that is fine: the artifact is schema-versioned
-(``repro.bench.operator_sweep/v1``, schema checked into
+Absolute numbers on this container are CPU-sized — tiny, and that is
+fine: the artifact is schema-versioned
+(``repro.bench.operator_sweep/v2``, schema checked into
 ``benchmarks/schemas/``) so successive perf PRs append comparable
 points, and ``fig6_roofline`` places the measured rows next to the
 analytic OI trajectory.  The emitted document is validated against the
@@ -36,7 +42,7 @@ jax.config.update("jax_enable_x64", True)
 
 from benchmarks.common import fmt_table  # noqa: E402
 
-SCHEMA = "repro.bench.operator_sweep/v1"
+SCHEMA = "repro.bench.operator_sweep/v2"
 SCHEMA_PATH = os.path.join(
     os.path.dirname(__file__), "schemas", "bench_operator_sweep.schema.json"
 )
@@ -44,30 +50,44 @@ SCHEMA_PATH = os.path.join(
 # Refinement per p for the full sweep: roughly equalized element work at
 # batch 4 (the fig5 FIXED_DOF idea, one level coarser since the scenario
 # fold multiplies the element count).
-SWEEP_REFINE = {1: 2, 2: 1, 4: 1, 8: 0}
+SWEEP_REFINE = {1: 2, 2: 1, 4: 1, 6: 0, 8: 0}
+
+# Lanes swept per p for the paop_pallas assembly (requested lanes; each
+# row also records the lane that actually ran).
+SWEEP_LANES = ("interpret", "compiled")
 
 
 def run(
-    ps=(1, 2, 4, 8),
+    ps=(1, 2, 4, 6, 8),
     batch: int = 4,
     refine: int | None = None,
     repeats: int = 3,
     min_time_s: float = 0.05,
     smoke: bool = False,
+    lanes=SWEEP_LANES,
 ) -> list[dict]:
-    """One artifact row per p (measured + models + roofline placement).
-    ``--smoke`` shrinks to refine 0 / batch 2 / single short repeat —
-    same code path, same schema, CI-sized."""
+    """Artifact rows: per p, one ``paop`` baseline plus one
+    ``paop_pallas`` row per requested lane (measured + models +
+    roofline placement).  ``--smoke`` shrinks to refine 0 / batch 2 /
+    single short repeat — same code path, same schema, CI-sized."""
     from repro.launch.roofline import place_measured
     from repro.obs.throughput import operator_throughput
 
-    rows = []
+    cells = []
     for p in ps:
         r = 0 if smoke else (refine if refine is not None else SWEEP_REFINE[p])
+        cells.append((p, r, "paop", None))
+        for lane in lanes:
+            cells.append((p, r, "paop_pallas", lane))
+
+    rows = []
+    for p, r, assembly, lane in cells:
         row = operator_throughput(
             p,
             r,
             2 if smoke else batch,
+            assembly=assembly,
+            pallas_lane=lane,
             repeats=1 if smoke else repeats,
             min_time_s=0.0 if smoke else min_time_s,
         )
@@ -83,8 +103,10 @@ def run(
 
 
 def make_document(rows: list[dict], smoke: bool) -> dict:
+    from repro.kernels.pa_elasticity.ops import resolve_lane
     from repro.launch.roofline import V5E
 
+    auto_lane = resolve_lane("auto")
     return {
         "schema": SCHEMA,
         "benchmark": "operator_sweep",
@@ -94,7 +116,8 @@ def make_document(rows: list[dict], smoke: bool) -> dict:
             "platform": platform.platform(),
             "backend": jax.default_backend(),
             "device_count": jax.device_count(),
-            "pallas_interpret": True,
+            "pallas_lane_auto": auto_lane,
+            "pallas_interpret": auto_lane == "interpret",
             "x64": True,
         },
         "target_hw": {
@@ -119,9 +142,13 @@ def write_artifact(doc: dict, out: str) -> None:
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--p", type=int, nargs="+", default=[1, 2, 4, 8])
+    ap.add_argument("--p", type=int, nargs="+", default=[1, 2, 4, 6, 8])
     ap.add_argument("--batch", type=int, default=4,
                     help="scenarios folded into the batched operator")
+    ap.add_argument("--lanes", nargs="+", default=list(SWEEP_LANES),
+                    choices=["auto", "compiled", "interpret"],
+                    help="requested paop_pallas lanes swept per p (rows "
+                         "record the lane that actually ran)")
     ap.add_argument("--refine", type=int, default=None,
                     help="override the per-p refinement map")
     ap.add_argument("--repeats", type=int, default=3)
@@ -137,15 +164,17 @@ def main() -> None:
         refine=args.refine,
         repeats=args.repeats,
         smoke=args.smoke,
+        lanes=tuple(args.lanes),
     )
     print(fmt_table(
         rows,
-        ["p", "refine", "batch", "dofs", "t_apply_s", "dofs_per_s",
-         "gbytes_per_s", "oi_model", "v5e_roof_fraction", "v5e_bound"],
+        ["p", "assembly", "pallas_lane", "refine", "batch", "dofs",
+         "t_apply_s", "dofs_per_s", "gbytes_per_s", "oi_model",
+         "v5e_roof_fraction", "v5e_bound"],
         title=(
             "Batched operator apply throughput "
-            f"(assembly=paop, {'smoke, ' if args.smoke else ''}CPU "
-            "interpret — trajectory artifact, not absolute perf)"
+            f"({'smoke, ' if args.smoke else ''}lane column is the lane "
+            "that ran — trajectory artifact, not absolute perf)"
         ),
     ))
     doc = make_document(rows, smoke=args.smoke)

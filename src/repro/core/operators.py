@@ -47,6 +47,7 @@ from repro.core import pa_baseline as _base
 from repro.core import pa_sumfact as _sf
 from repro.core import paop as _paop
 from repro.core.basis import basis_tables
+from repro.kernels.pa_elasticity.ops import resolve_lane
 from repro.core.geometry import (
     MATERIALS_BEAM,
     make_quadrature_data,
@@ -82,7 +83,8 @@ class ElasticityOperator:
         materials: dict[int, tuple[float, float]] | None = None,
         dtype=jnp.float64,
         ess_faces=("x0",),
-        pallas_interpret: bool = True,
+        pallas_interpret: bool | None = None,
+        pallas_lane: str | None = None,
         shard_mesh=None,
     ):
         if assembly not in ASSEMBLY_LEVELS:
@@ -93,7 +95,13 @@ class ElasticityOperator:
         self.assembly = assembly
         self.dtype = dtype
         self.tables = space.tables
-        self._pallas_interpret = pallas_interpret
+        # Resolved at construction, so this attribute is the report of
+        # which Pallas lane actually runs ("compiled" or "interpret"):
+        # an explicit pallas_lane wins, the legacy pallas_interpret bool
+        # is honored (True pins the interpreter), and the default is
+        # "auto" — compiled when the backend can lower Pallas, interpret
+        # fallback otherwise.  Only consulted by assembly="paop_pallas".
+        self.pallas_lane = resolve_lane(pallas_lane, interpret=pallas_interpret)
         self.shard_mesh = shard_mesh
 
         geom = quadrature_geometry(space.mesh, self.tables)
@@ -322,7 +330,7 @@ class ElasticityOperator:
                 self.jinv,
                 self.B,
                 self.G,
-                interpret=self._pallas_interpret,
+                lane=self.pallas_lane,
             )
         raise AssertionError(a)
 

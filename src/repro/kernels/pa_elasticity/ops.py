@@ -1,14 +1,35 @@
 """jit'd public wrapper for the PAop Pallas kernel.
 
-Handles layout (framework element-first <-> kernel element-last),
+Handles lane selection (compiled vs interpret, with automatic
+fallback), layout (framework element-first <-> kernel element-last),
 padding to a whole number of element blocks, and the VMEM-budgeted
 choice of elements-per-block (the TPU analog of the paper's slice-wise
 working-set bound).
+
+Lanes
+-----
+The kernel runs in one of two *lanes*:
+
+* ``"compiled"`` — native Pallas lowering (TPU Mosaic / GPU Triton).
+  The real thing: one fused kernel per element block, VMEM-resident
+  intermediates, measured numbers that can move on the roofline.
+* ``"interpret"`` — the Pallas interpreter.  Runs on any backend
+  (including the CPU CI containers), bit-faithful to the kernel
+  dataflow, orders of magnitude slower.
+
+``resolve_lane`` picks the lane: an explicit request wins, ``"auto"``
+(and the legacy ``interpret=False``) selects ``compiled`` when the
+backend can actually lower Pallas (``backend_supports_compiled``, a
+cached compile probe) and falls back to ``interpret`` otherwise.  The
+*resolved* lane is the honest report of what ran — operators, solvers,
+the service and the BENCH artifacts all record it, never the request.
 """
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
+from jax.experimental import pallas as pl
 
 from repro.kernels.pa_elasticity.pa_elasticity import pa_elasticity_pallas
 
@@ -17,6 +38,9 @@ __all__ = [
     "elements_per_block",
     "clamp_elements_per_block",
     "block_workingset_bytes",
+    "backend_supports_compiled",
+    "resolve_lane",
+    "PALLAS_LANES",
 ]
 
 # Target VMEM footprint per grid step. Real v5e VMEM is ~16 MB; leave
@@ -24,18 +48,89 @@ __all__ = [
 VMEM_BUDGET_BYTES = 8 * 2 ** 20
 _LANE = 128  # TPU lane width: EB should be a multiple when possible.
 
+PALLAS_LANES = ("auto", "compiled", "interpret")
 
-def block_workingset_bytes(p: int, eb: int, itemsize: int = 4) -> int:
-    """Working set of one grid step: x/y blocks, lambda/mu blocks, the
-    reference gradient (9 ch), Voigt stress (6 ch) and pullback rows
-    (3 ch live at a time) at quadrature resolution."""
-    d1, q1 = p + 1, p + 2
+# Cached per-backend capability probe results (see
+# backend_supports_compiled); tests monkeypatch this to simulate a
+# compiled-capable backend on CPU.
+_SUPPORT_CACHE: dict[str, bool] = {}
+
+
+def _compile_probe() -> bool:
+    """Attempt to actually compile a trivial Pallas kernel without
+    ``interpret``.  Any failure — no Mosaic/Triton lowering for this
+    backend, driver too old — means the compiled lane is unavailable."""
+
+    def k(x_ref, o_ref):
+        o_ref[...] = x_ref[...] * 2.0
+
+    try:
+        x = jnp.zeros((8, 128), jnp.float32)
+        jax.jit(
+            lambda v: pl.pallas_call(
+                k, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype)
+            )(v)
+        ).lower(x).compile()
+        return True
+    except Exception:
+        return False
+
+
+def backend_supports_compiled(backend: str | None = None) -> bool:
+    """True when the active JAX backend can lower ``pallas_call``
+    natively (TPU Mosaic / GPU Triton).  CPU only interprets.  The
+    answer is a cached *compile probe* — a backend that should support
+    Pallas but fails to compile a trivial kernel reports False, which
+    is what makes the ``interpret`` fallback automatic rather than a
+    crash at first apply."""
+    b = backend if backend is not None else jax.default_backend()
+    if b not in _SUPPORT_CACHE:
+        _SUPPORT_CACHE[b] = b in ("tpu", "gpu") and _compile_probe()
+    return _SUPPORT_CACHE[b]
+
+
+def resolve_lane(lane: str | None = None, *, interpret: bool | None = None) -> str:
+    """Resolve a lane request to the lane that will actually run:
+    ``"compiled"`` or ``"interpret"``.
+
+    ``lane`` is ``"auto"`` / ``"compiled"`` / ``"interpret"`` (or None,
+    meaning "derive from the legacy ``interpret`` flag": True pins the
+    interpreter, False/None asks for auto).  ``"auto"`` and
+    ``"compiled"`` both fall back to ``"interpret"`` when
+    :func:`backend_supports_compiled` says the backend cannot lower the
+    kernel — the resolved value is the report of record for what ran."""
+    if lane is None:
+        lane = "interpret" if interpret else "auto"
+    if lane not in PALLAS_LANES:
+        raise ValueError(
+            f"unknown pallas lane {lane!r}; expected one of {PALLAS_LANES}"
+        )
+    if lane == "interpret":
+        return "interpret"
+    return "compiled" if backend_supports_compiled() else "interpret"
+
+
+def block_workingset_bytes(
+    p: int, eb: int, itemsize: int = 4, q1d: int | None = None
+) -> int:
+    """Peak working set of one grid step under the component-sliced
+    dataflow: the x/y blocks, lambda/mu blocks, and at quadrature
+    resolution the 6 Voigt channels + 3 pullback rows + ~3 transient
+    sweep buffers live at the forward/backward seam (the 9-channel
+    ``ghat`` stack of the naive dataflow is never materialized).
+
+    ``q1d`` defaults to the p+2 Gauss rule but MUST be passed when the
+    kernel runs a different quadrature — ``pa_elasticity`` reads the
+    real ``q1d`` off ``lam_w`` and threads it here, so a non-default
+    rule budgets VMEM against the truth instead of the default."""
+    d1 = p + 1
+    q1 = (p + 2) if q1d is None else q1d
     per_elem = (
         2 * 3 * d1 ** 3  # x, y
         + 2 * q1 ** 3  # lambda_w, mu_w
-        + 9 * q1 ** 3  # ghat / grad
-        + 6 * q1 ** 3  # voigt stress
+        + 6 * q1 ** 3  # voigt stress channels
         + 3 * q1 ** 3  # per-output-component pullback rows
+        + 3 * q1 ** 3  # transient forward/backward sweep buffers
     )
     return per_elem * eb * itemsize
 
@@ -43,39 +138,57 @@ def block_workingset_bytes(p: int, eb: int, itemsize: int = 4) -> int:
 def clamp_elements_per_block(eb: int, ne: int) -> int:
     """Clamp a requested elements-per-block to the element count.
 
-    Never returns a block larger than ``ne`` (so padding is bounded below
-    2x instead of the >10x blow-up an unclamped 128-block causes on e.g.
-    ne=12), and prefers the largest divisor of ``ne`` that is at least
+    Never returns a block larger than ``ne`` (so padding is bounded
+    instead of the >10x blow-up an unclamped 128-block causes on e.g.
+    ne=12).  Prefers the largest divisor of ``ne`` that is at least
     half the clamped block — zero padding without shrinking the block
-    enough to hurt occupancy.
-    """
+    enough to hurt occupancy.  When no such divisor exists (e.g. prime
+    ``ne``), the block is shrunk to ``ceil(ne / nblocks)`` at the same
+    grid-step count, so padding is at most ``nblocks - 1`` elements
+    (< one element per grid step) — NOT the up-to-2x padding the old
+    return-the-request fallback allowed at high p where elements are
+    scarce."""
     eb = max(1, min(eb, ne))
     for d in range(eb, 0, -1):
         if ne % d == 0:
             if 2 * d > eb:
-                return d
+                return d  # zero padding, >= half occupancy
             break
-    return eb
+    # No divisor of ne in [ceil(eb/2), eb]: keep the grid-step count a
+    # block of eb would need and minimize padding at that count.  The
+    # result still satisfies 2 * block >= eb (occupancy) and pads by at
+    # most nblocks - 1 elements.
+    nblocks = -(-ne // eb)
+    return -(-ne // nblocks)
 
 
-def elements_per_block(p: int, ne: int, itemsize: int = 4) -> int:
+def elements_per_block(
+    p: int, ne: int, itemsize: int = 4, q1d: int | None = None
+) -> int:
     """Largest lane-aligned EB whose working set fits the VMEM budget,
-    clamped to the element count."""
+    clamped to the element count.  ``q1d`` is the actual 1-D quadrature
+    point count when it differs from the default p+2 rule."""
     eb = _LANE
-    while block_workingset_bytes(p, 2 * eb, itemsize) <= VMEM_BUDGET_BYTES:
+    while block_workingset_bytes(p, 2 * eb, itemsize, q1d) <= VMEM_BUDGET_BYTES:
         eb *= 2
-    while eb > 8 and block_workingset_bytes(p, eb, itemsize) > VMEM_BUDGET_BYTES:
+    while eb > 1 and block_workingset_bytes(p, eb, itemsize, q1d) > VMEM_BUDGET_BYTES:
         eb //= 2
     return clamp_elements_per_block(eb, ne)
 
 
-def pa_elasticity(x_e, lam_w, mu_w, jinv, B, G, *, eb=None, interpret=True):
+def pa_elasticity(
+    x_e, lam_w, mu_w, jinv, B, G, *,
+    eb=None, interpret: bool | None = None, lane: str | None = None,
+):
     """Fused PAop operator action.
 
     x_e:    (nelem, 3, D1D, D1D, D1D)  framework layout
     lam_w:  (nelem, Q1D, Q1D, Q1D)     (mu_w likewise)
     jinv:   (3, 3) mesh-constant affine J^{-1}
     B, G:   (Q1D, D1D)
+    lane:   "auto" | "compiled" | "interpret" (see :func:`resolve_lane`;
+            the legacy boolean ``interpret`` is honored when ``lane`` is
+            None — ``interpret=True`` pins the interpreter).
     Returns y_e in the same layout as x_e.
     """
     if jinv.ndim != 2:
@@ -83,14 +196,27 @@ def pa_elasticity(x_e, lam_w, mu_w, jinv, B, G, *, eb=None, interpret=True):
             "pa_elasticity kernel assumes a mesh-constant affine J^{-1}; "
             "use repro.core.paop.paop_apply for per-element geometry"
         )
+    resolved = resolve_lane(lane, interpret=interpret)
     ne = x_e.shape[0]
     d1d = x_e.shape[-1]
     q1d = lam_w.shape[-1]
     p = d1d - 1
     itemsize = jnp.dtype(x_e.dtype).itemsize
     if eb is None:
-        eb = elements_per_block(p, ne, itemsize)
+        eb = elements_per_block(p, ne, itemsize, q1d)
     eb = clamp_elements_per_block(eb, ne)
+
+    # The block working set must fit the VMEM budget for the lane that
+    # actually runs — checked against the REAL q1d (read off lam_w), so
+    # a non-default quadrature rule cannot silently over-budget VMEM.
+    ws = block_workingset_bytes(p, eb, itemsize, q1d)
+    if ws > VMEM_BUDGET_BYTES:
+        raise ValueError(
+            f"pa_elasticity block working set {ws} B (p={p}, q1d={q1d}, "
+            f"eb={eb}, itemsize={itemsize}) exceeds the VMEM budget "
+            f"{VMEM_BUDGET_BYTES} B; pass a smaller eb or let "
+            f"elements_per_block choose it"
+        )
 
     pad = (-ne) % eb
     xt = jnp.moveaxis(x_e, 0, -1)  # (3, D, D, D, NE)
@@ -102,7 +228,8 @@ def pa_elasticity(x_e, lam_w, mu_w, jinv, B, G, *, eb=None, interpret=True):
         mt = jnp.pad(mt, [(0, 0)] * 3 + [(0, pad)])
 
     yt = pa_elasticity_pallas(
-        xt, lt, mt, jinv, B, G, d1d=d1d, q1d=q1d, eb=eb, interpret=interpret
+        xt, lt, mt, jinv, B, G,
+        d1d=d1d, q1d=q1d, eb=eb, interpret=resolved == "interpret",
     )
     if pad:
         yt = yt[..., :ne]

@@ -3,18 +3,26 @@
 TPU-native adaptation of the paper's PAop kernel (Sec. 4). The paper's
 CPU design decisions map as follows:
 
-* **slice-wise loops bounding the L1/L2 working set**  ->  an explicit
-  `BlockSpec` that tiles a *block of EB elements* into VMEM.  On TPU the
-  whole per-element working set (~114 KB at p=8 in f32) trivially fits
-  the ~16 MB VMEM, so the tiling knob is *elements per block*, chosen by
-  `ops.elements_per_block` to keep the block working set under a VMEM
-  budget.
+* **slice-wise loops bounding the L1/L2 working set**  ->  two levels of
+  tiling.  Across elements, an explicit `BlockSpec` tiles a *block of EB
+  elements* into VMEM, with EB chosen by `ops.elements_per_block` to
+  keep the block working set under a VMEM budget.  Within the kernel
+  body, the dataflow is *component-sliced*: the forward pass walks one
+  displacement component at a time and folds its physical gradients
+  straight into the 6 Voigt accumulators, and the backward pass emits
+  one output component at a time, writing each straight to its `y_ref`
+  slice.  The 9-channel reference-gradient stack (`ghat`) and the
+  concatenated output accumulator of the naive dataflow are never
+  materialized — the VMEM live set at quadrature resolution is bounded
+  by the Voigt channels plus one component's transient sweeps (~12
+  Q^3-channels instead of ~18), the TPU analog of the paper's slice
+  loops keeping one x/y-plane resident in L1.
 * **SIMD vectorization across the contraction loops**  ->  an
   element-last data layout `(3, D1D, D1D, D1D, EB)`.  Each 1D
   contraction becomes a `(Q1D x D1D) @ (D1D x N)` matmul with
-  N = (channels x planes x EB) — the element axis fills the 128-wide
-  MXU/VPU lanes that a single element's D1D in [2, 9] never could.
-  This is the TPU version of "vectorize across elements".
+  N = (planes x EB) — the element axis fills the 128-wide MXU/VPU lanes
+  that a single element's D1D in [2, 9] never could.  This is the TPU
+  version of "vectorize across elements".
 * **macro-kernel fusion**  ->  the kernel body runs forward
   interpolation, pointwise Voigt stress, and the transpose contraction
   back-to-back on VMEM-resident values; the operator-wide QVec round
@@ -23,10 +31,15 @@ CPU design decisions map as follows:
 * **Voigt notation**  ->  the stress lives as 6 channels; backward
   reconstructs rows of sigma.J^{-T} through the symmetric index map.
 
+Lanes: `interpret=True` runs the Pallas interpreter (any backend, used
+for CPU CI); `interpret=False` is the *compiled* lane (TPU Mosaic /
+GPU Triton).  Lane selection with automatic fallback lives in
+`ops.resolve_lane`; this module takes the already-resolved boolean.
+
 The kernel assumes affine geometry with a mesh-constant J^{-1} (uniform
 box; the general per-element-affine case is handled by the pure-JAX PAop
-path).  Validated in interpret mode against `ref.paop_ref` across
-p in 1..8 and dtypes (see tests/test_pa_elasticity_kernel.py).
+path).  Validated against `ref.paop_ref` across p in 1..8 and dtypes,
+and compiled-vs-interpret (see tests/test_pa_elasticity_kernel.py).
 """
 
 from __future__ import annotations
@@ -77,58 +90,78 @@ def _kernel(x_ref, lam_ref, mu_ref, jinv_ref, b_ref, g_ref, y_ref):
     jinv_ref:(3, 3)                   constant per mesh (affine)
     b_ref:   (Q1D, D1D), g_ref: (Q1D, D1D)
     y_ref:   (3, D1D, D1D, D1D, EB)   VMEM
+
+    The body is component-sliced (the paper's slice-wise loop
+    reorganization): neither the 9-channel reference gradient stack nor
+    a concatenated output buffer ever exists.  Forward folds each
+    component's gradients into the 6 Voigt accumulators as it goes;
+    backward emits one output component per iteration directly into its
+    y_ref slice.
     """
-    x = x_ref[...]
     B = b_ref[...]
     G = g_ref[...]
     jinv = jinv_ref[...]
     lam_w = lam_ref[...]
     mu_w = mu_ref[...]
 
-    # ---- forward: X then Y then Z 1D contractions (sm0/sm1 of the paper)
-    u = _cx(x, B)
-    v = _cx(x, G)
-    d_xi = _cy(v, B)
-    d_eta = _cy(u, G)
-    u_xy = _cy(u, B)
-    g_xi = _cz(d_xi, B)
-    g_eta = _cz(d_eta, B)
-    g_zeta = _cz(u_xy, G)
-    # reference gradient: (3c, 3m, Q, Q, Q, EB)
-    ghat = jnp.stack([g_xi, g_eta, g_zeta], axis=1)
-
-    # ---- physical gradient: d_j u_c = sum_m ghat[c, m] Jinv[m, j]
-    grad = jnp.einsum("cmzyxe,mj->cjzyxe", ghat, jinv)
+    # ---- forward, one displacement component c at a time (sm0/sm1 of
+    # the paper, sliced).  Live at quadrature resolution: the running
+    # Voigt accumulators (3 diagonal gradients + 3 symmetrized
+    # off-diagonal sums) and one component's 3 transient reference
+    # gradients — never the full (3, 3, Q, Q, Q, EB) grad tensor.
+    diag = [None] * 3  # d_c u_c (physical)
+    off = {}  # {(j, k): d_k u_j + d_j u_k}, j < k
+    for c in range(3):
+        xc = x_ref[c]
+        u = _cx(xc, B)
+        v = _cx(xc, G)
+        # ghat[c, :] = (d_xi, d_eta, d_zeta) u_c, reference coords
+        g0 = _cz(_cy(v, B), B)
+        g1 = _cz(_cy(u, G), B)
+        g2 = _cz(_cy(u, B), G)
+        # physical row: d_j u_c = sum_m ghat[c, m] Jinv[m, j]
+        for j in range(3):
+            grad_cj = g0 * jinv[0, j] + g1 * jinv[1, j] + g2 * jinv[2, j]
+            if j == c:
+                diag[c] = grad_cj
+            else:
+                key = (min(c, j), max(c, j))
+                off[key] = (
+                    grad_cj if key not in off else off[key] + grad_cj
+                )
 
     # ---- pointwise structured Voigt stress (weighted), 6 channels
-    div = grad[0, 0] + grad[1, 1] + grad[2, 2]
+    div = diag[0] + diag[1] + diag[2]
     ld = lam_w * div
     two_mu = 2.0 * mu_w
-    s00 = ld + two_mu * grad[0, 0]
-    s11 = ld + two_mu * grad[1, 1]
-    s22 = ld + two_mu * grad[2, 2]
-    s01 = mu_w * (grad[0, 1] + grad[1, 0])
-    s02 = mu_w * (grad[0, 2] + grad[2, 0])
-    s12 = mu_w * (grad[1, 2] + grad[2, 1])
+    s = {
+        (0, 0): ld + two_mu * diag[0],
+        (1, 1): ld + two_mu * diag[1],
+        (2, 2): ld + two_mu * diag[2],
+        (0, 1): mu_w * off[(0, 1)],
+        (0, 2): mu_w * off[(0, 2)],
+        (1, 2): mu_w * off[(1, 2)],
+    }
 
-    # ---- backward: rows of sigma J^{-T}; sigma_{cj} via symmetric map
-    voigt = ((s00, s01, s02), (s01, s11, s12), (s02, s12, s22))
-    acc = None
+    def sigma(a, b):
+        return s[(a, b) if a <= b else (b, a)]
+
+    # ---- backward, one output component c at a time: rows of
+    # sigma.J^{-T} through the symmetric map, transpose sweeps, written
+    # straight into the component's output slice (no concatenate).
     for c in range(3):
-        # q_m = sum_j sigma[c, j] Jinv[m, j]   (per-output-component buffer)
+        # q_m = sum_j sigma[c, j] Jinv[m, j]   (3 pullback rows live)
         q = [
-            voigt[c][0] * jinv[m, 0]
-            + voigt[c][1] * jinv[m, 1]
-            + voigt[c][2] * jinv[m, 2]
+            sigma(c, 0) * jinv[m, 0]
+            + sigma(c, 1) * jinv[m, 1]
+            + sigma(c, 2) * jinv[m, 2]
             for m in range(3)
         ]
         # transpose sweeps: G along the derivative direction m, B elsewhere
         y_c = _cx_t(_cy_t(_cz_t(q[0], B), B), G)
         y_c += _cx_t(_cy_t(_cz_t(q[1], B), G), B)
         y_c += _cx_t(_cy_t(_cz_t(q[2], G), B), B)
-        y_c = y_c[None]
-        acc = y_c if acc is None else jnp.concatenate([acc, y_c], axis=0)
-    y_ref[...] = acc
+        y_ref[c] = y_c
 
 
 @functools.partial(
@@ -139,6 +172,9 @@ def pa_elasticity_pallas(x_e, lam_w, mu_w, jinv, B, G, *, d1d, q1d, eb, interpre
 
     x_e: (3, D1D, D1D, D1D, NE) element-last layout, NE a multiple of eb.
     lam_w/mu_w: (Q1D, Q1D, Q1D, NE); jinv: (3, 3); B/G: (Q1D, D1D).
+    ``interpret=False`` is the compiled lane (native Pallas lowering);
+    callers go through ``ops.pa_elasticity``, which resolves the lane
+    against backend capability first.
     """
     ne = x_e.shape[-1]
     assert ne % eb == 0, (ne, eb)
@@ -152,6 +188,20 @@ def pa_elasticity_pallas(x_e, lam_w, mu_w, jinv, B, G, *, d1d, q1d, eb, interpre
 
     def full(i):
         return (0, 0)
+
+    kwargs = {}
+    if not interpret:
+        # Compiled lane: element blocks are independent, so the grid is
+        # free to execute in any order (enables Mosaic to overlap the
+        # next block's DMA with this block's compute).
+        try:
+            from jax.experimental.pallas import tpu as pltpu
+
+            kwargs["compiler_params"] = pltpu.TPUCompilerParams(
+                dimension_semantics=("arbitrary",)
+            )
+        except (ImportError, AttributeError):  # pragma: no cover
+            pass  # non-TPU compiled lowering (e.g. Triton) needs none
 
     out = pl.pallas_call(
         _kernel,
@@ -167,5 +217,6 @@ def pa_elasticity_pallas(x_e, lam_w, mu_w, jinv, B, G, *, d1d, q1d, eb, interpre
         ],
         out_specs=pl.BlockSpec((3, d1d, d1d, d1d, eb), e_idx),
         interpret=interpret,
+        **kwargs,
     )(x_e, lam_w, mu_w, jinv, B, G)
     return out

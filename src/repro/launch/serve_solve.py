@@ -140,6 +140,13 @@ def main() -> None:
     ap.add_argument("--refine", type=int, default=1)
     ap.add_argument("--rel-tol", type=float, default=1e-6)
     ap.add_argument("--assembly", default="paop")
+    ap.add_argument("--pallas-lane", default="auto",
+                    choices=["auto", "compiled", "interpret"],
+                    help="Pallas kernel lane for paop_pallas assembly: "
+                         "compiled (native lowering) with automatic "
+                         "interpret fallback on backends that cannot "
+                         "lower Pallas (the service reports the lane "
+                         "that actually ran)")
     ap.add_argument("--repeat", type=int, default=1,
                     help="re-run the workload to demonstrate cache hits")
     ap.add_argument("--continuous", action="store_true",
@@ -200,10 +207,14 @@ def main() -> None:
         spans = SpanRecorder()
     service = ElasticityService(
         max_batch=args.max_batch, assembly=args.assembly,
+        pallas_lane=args.pallas_lane,
         chunk_iters=args.chunk_iters, chunk_policy=args.chunk_policy,
         min_chunk=args.min_chunk, max_chunk=args.max_chunk, mesh=mesh,
         spans=spans,
     )
+    if args.assembly == "paop_pallas":
+        print(f"pallas lane: {service.pallas_lane} "
+              f"(requested {args.pallas_lane})")
     for round_i in range(args.repeat):
         reqs = make_workload(
             args.n_requests, args.p, args.refine, args.rel_tol,

@@ -56,7 +56,8 @@ def solve_beam(
     coarse_method: str = "cholesky",
     dtype=jnp.float64,
     keep_solution: bool = False,
-    pallas_interpret: bool = True,
+    pallas_interpret: bool | None = None,
+    pallas_lane: str | None = None,
     materials: dict | None = None,
     traction=TRACTION,
 ) -> SolveReport:
@@ -73,6 +74,7 @@ def solve_beam(
         dtype=dtype,
         coarse_method=coarse_method,
         pallas_interpret=pallas_interpret,
+        pallas_lane=pallas_lane,
     )
     fine = gmg.fine
     t1 = time.perf_counter()

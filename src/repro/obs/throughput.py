@@ -97,7 +97,8 @@ def operator_throughput(
     dtype=jnp.float64,
     repeats: int = 3,
     min_time_s: float = 0.05,
-    pallas_interpret: bool = True,
+    pallas_interpret: bool | None = None,
+    pallas_lane: str | None = None,
     coarse_mesh=None,
     clock=time.perf_counter,
 ) -> dict[str, Any]:
@@ -107,11 +108,23 @@ def operator_throughput(
     The operator is built exactly like a solve level: S scenario
     material dicts folded to per-element fields on the fine mesh of
     ``coarse_mesh`` (beam default) refined ``refine`` times, applied to
-    a random (S, nscalar, 3) L-vector under jit."""
+    a random (S, nscalar, 3) L-vector under jit.
+
+    The row records the Pallas lane that *actually ran*
+    (``pallas_lane``: the operator's resolved lane for ``paop_pallas``,
+    ``"none"`` for assemblies that never enter Pallas) next to the lane
+    that was *requested* (``lane_requested``) — so a sweep that asks for
+    ``compiled`` on a backend that cannot lower Pallas is recorded as
+    the interpret run it really was."""
     from repro.core.operators import ElasticityOperator
     from repro.fem.mesh import beam_hex
     from repro.fem.space import H1Space
 
+    lane_requested = (
+        pallas_lane
+        if pallas_lane is not None
+        else ("interpret" if pallas_interpret else "auto")
+    )
     mesh = (coarse_mesh if coarse_mesh is not None else beam_hex()).refined(
         refine
     )
@@ -122,7 +135,9 @@ def operator_throughput(
         materials=_scenario_materials(batch),
         dtype=dtype,
         pallas_interpret=pallas_interpret,
+        pallas_lane=pallas_lane,
     )
+    lane_ran = op.pallas_lane if assembly == "paop_pallas" else "none"
     x = jax.random.normal(
         jax.random.PRNGKey(p * 1000 + refine * 10 + batch),
         (batch, space.nscalar, 3),
@@ -143,6 +158,9 @@ def operator_throughput(
         "refine": int(refine),
         "batch": int(batch),
         "assembly": assembly,
+        "pallas_lane": lane_ran,
+        "lane_requested": lane_requested,
+        "pallas_interpret": bool(lane_ran == "interpret"),
         "dtype": str(jnp.dtype(dtype)),
         "ndof": int(space.ndof),
         "nelem": int(space.nelem),

@@ -325,7 +325,8 @@ class ElasticityService:
         assembly: str = "paop",
         dtype=jnp.float64,
         maxiter: int = 200,
-        pallas_interpret: bool = True,
+        pallas_interpret: bool | None = None,
+        pallas_lane: str | None = None,
         chunk_iters: int = 8,
         chunk_policy=None,
         min_chunk: int | None = None,
@@ -344,7 +345,16 @@ class ElasticityService:
         self.assembly = assembly
         self.dtype = dtype
         self.maxiter = maxiter
-        self.pallas_interpret = pallas_interpret
+        # Pallas lane for every solver this service builds, resolved at
+        # construction ("compiled" or "interpret"; "auto" — the default
+        # — picks compiled when the backend can lower Pallas and falls
+        # back to interpret otherwise).  ``pallas_interpret`` is the
+        # legacy bool spelling: True pins the interpreter.  The resolved
+        # value is the service's report of which lane actually runs.
+        from repro.kernels.pa_elasticity.ops import resolve_lane
+
+        self.pallas_lane = resolve_lane(pallas_lane, interpret=pallas_interpret)
+        self.pallas_interpret = self.pallas_lane == "interpret"
         self.chunk_iters = chunk_iters
         # Chunk scheduling policy for the continuous path.  The old
         # ``chunk_iters < 1`` check generalizes to the policy-bound
@@ -525,7 +535,7 @@ class ElasticityService:
             assembly=self.assembly,
             dtype=self.dtype,
             maxiter=self.maxiter,
-            pallas_interpret=self.pallas_interpret,
+            pallas_lane=self.pallas_lane,
             mesh=self.mesh,
         )
         self._solvers[key] = solver

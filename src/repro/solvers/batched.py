@@ -71,6 +71,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.operators import DEFER_MATERIALS, ElasticityOperator
+from repro.kernels.pa_elasticity.ops import resolve_lane
 from repro.distributed.sharding import (
     device_put_scenario,
     normalize_scenario_mesh,
@@ -327,7 +328,8 @@ class BatchedGMGSolver:
         ess_faces=("x0",),
         traction_face: str = "x1",
         maxiter: int = 200,
-        pallas_interpret: bool = True,
+        pallas_interpret: bool | None = None,
+        pallas_lane: str | None = None,
         mesh=None,
     ):
         if assembly == "fa":
@@ -340,6 +342,11 @@ class BatchedGMGSolver:
         self.cheb_degree = cheb_degree
         self.power_iters = power_iters
         self.maxiter = maxiter
+        # Pallas lane, resolved ONCE here so every level operator runs
+        # the same lane and ``self.pallas_lane`` reports what actually
+        # runs ("compiled" or "interpret"; auto falls back to interpret
+        # on backends that cannot lower Pallas natively).
+        self.pallas_lane = resolve_lane(pallas_lane, interpret=pallas_interpret)
         # Scenario-axis device mesh (None = single-device).  An int is
         # shorthand for "shard over the first n devices".
         self.mesh, self.n_shards = normalize_scenario_mesh(mesh)
@@ -372,7 +379,7 @@ class BatchedGMGSolver:
                 materials=DEFER_MATERIALS,
                 dtype=dtype,
                 ess_faces=ess_faces,
-                pallas_interpret=pallas_interpret,
+                pallas_lane=self.pallas_lane,
                 shard_mesh=self.mesh,
             )
             self._base_ops.append(op)

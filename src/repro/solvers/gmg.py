@@ -115,9 +115,15 @@ def build_hierarchy(
     power_iters: int = 10,
     coarse_method: str = "cholesky",
     ess_faces=("x0",),
-    pallas_interpret: bool = True,
+    pallas_interpret: bool | None = None,
+    pallas_lane: str | None = None,
 ) -> GMGPreconditioner:
-    """Build the paper's GMG preconditioner for the beam benchmark."""
+    """Build the paper's GMG preconditioner for the beam benchmark.
+
+    ``pallas_lane`` ("auto"/"compiled"/"interpret", default auto with
+    interpret fallback) selects the Pallas lane for every
+    ``paop_pallas`` level; the legacy ``pallas_interpret`` bool is
+    honored when no lane is given."""
     spaces = hierarchy_spaces(coarse_mesh, n_h_refine, p_target)
 
     levels: list[Level] = []
@@ -134,6 +140,7 @@ def build_hierarchy(
             dtype=dtype,
             ess_faces=ess_faces,
             pallas_interpret=pallas_interpret,
+            pallas_lane=pallas_lane,
         )
         cop = op.constrained()
         smoother = None

@@ -52,8 +52,8 @@ def test_docs_exist_and_have_snippets():
     examples."""
     names = {p.name for p in DOC_FILES}
     assert {
-        "README.md", "ARCHITECTURE.md", "MATERIALS.md", "SCHEDULING.md",
-        "OBSERVABILITY.md",
+        "README.md", "ARCHITECTURE.md", "KERNELS.md", "MATERIALS.md",
+        "SCHEDULING.md", "OBSERVABILITY.md",
     } <= names
     by_file = {}
     for param in SNIPPETS:
@@ -61,6 +61,7 @@ def test_docs_exist_and_have_snippets():
         by_file[param.id.split(":")[0]] += 1
     assert by_file.get("README.md", 0) >= 1
     assert by_file.get("docs/ARCHITECTURE.md", 0) >= 2
+    assert by_file.get("docs/KERNELS.md", 0) >= 3
     assert by_file.get("docs/MATERIALS.md", 0) >= 4
     assert by_file.get("docs/SCHEDULING.md", 0) >= 5
     assert by_file.get("docs/OBSERVABILITY.md", 0) >= 4

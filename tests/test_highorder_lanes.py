@@ -1,0 +1,202 @@
+"""High-order (p=4, p=6) lane differentials.
+
+The Pallas lane — compiled vs interpret, with automatic fallback — is
+an implementation detail of the ``paop_pallas`` assembly: it must never
+change what a solve computes.  These tests lock that down at the three
+levels users touch:
+
+* solver (``BatchedGMGSolver.solve``): compiled-lane and
+  interpret-lane runs produce identical iteration counts and solutions,
+  and both agree with the einsum ``paop`` reference assembly;
+* service (``ElasticityService``): the batched/generational path
+  reports the same outcome regardless of lane, and
+  ``service.pallas_lane`` reports the lane that actually runs;
+* sharded (8 virtual devices): the lane differential survives
+  scenario-axis sharding.
+
+On backends without native Pallas lowering (the CPU CI containers) the
+compiled request falls back to the interpreter, so the two lanes are
+bitwise identical — exercising exactly the fallback path a TPU-trained
+artifact relies on when replayed on CPU.  Lane *resolution* plumbing is
+covered by fast tests via the monkeypatched capability cache.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.distributed.sharding import scenario_mesh
+from repro.fem.mesh import beam_hex
+from repro.kernels.pa_elasticity import ops
+from repro.serve.elasticity_service import ElasticityService, SolveRequest
+from repro.solvers.batched import BatchedGMGSolver
+
+MATS = [
+    {1: (50.0, 50.0), 2: (1.0, 1.0)},
+    {1: (57.0, 51.3), 2: (1.5, 1.5)},
+]
+TRACTIONS = np.array([[0.0, 0.0, -1e-2], [0.0, 1e-3, -2e-2]])
+TOLS = np.array([1e-8, 1e-8])
+MAXITER = 400
+
+
+def _solve(p, assembly, lane=None, mesh=None, mats=MATS, tr=TRACTIONS,
+           tol=TOLS):
+    solver = BatchedGMGSolver(
+        beam_hex(), 0, p, assembly=assembly, pallas_lane=lane,
+        maxiter=MAXITER, mesh=mesh,
+    )
+    return solver, solver.solve(mats, tr, tol)
+
+
+def _assert_same_solve(res, ref, context, *, exact=False):
+    np.testing.assert_array_equal(
+        np.asarray(res.iterations), np.asarray(ref.iterations),
+        err_msg=f"{context}: iteration counts diverged",
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res.converged), np.asarray(ref.converged),
+        err_msg=f"{context}: convergence flags diverged",
+    )
+    if exact:
+        np.testing.assert_array_equal(
+            np.asarray(res.x), np.asarray(ref.x),
+            err_msg=f"{context}: solutions diverged",
+        )
+    else:
+        scale = float(np.abs(np.asarray(ref.x)).max()) or 1.0
+        np.testing.assert_allclose(
+            np.asarray(res.x), np.asarray(ref.x),
+            atol=1e-10 * scale, rtol=0,
+            err_msg=f"{context}: solutions diverged",
+        )
+
+
+# -- fast: lane resolution plumbing ------------------------------------------
+
+
+def test_lane_plumbing_solver_and_service(monkeypatch):
+    """The lane resolves ONCE at construction in every layer, and the
+    stored value is the lane that actually runs, not the request."""
+    backend = jax.default_backend()
+
+    monkeypatch.setitem(ops._SUPPORT_CACHE, backend, False)
+    solver = BatchedGMGSolver(beam_hex(), 0, 1, assembly="paop_pallas")
+    assert solver.pallas_lane == "interpret"  # auto fell back
+    svc = ElasticityService(assembly="paop_pallas", pallas_lane="compiled")
+    assert svc.pallas_lane == "interpret"  # request honestly downgraded
+    assert svc.pallas_interpret is True
+
+    monkeypatch.setitem(ops._SUPPORT_CACHE, backend, True)
+    solver = BatchedGMGSolver(beam_hex(), 0, 1, assembly="paop_pallas")
+    assert solver.pallas_lane == "compiled"
+    assert solver._base_ops[-1].pallas_lane == "compiled"
+    svc = ElasticityService(assembly="paop_pallas")
+    assert svc.pallas_lane == "compiled"
+    assert svc.pallas_interpret is False
+    # the legacy bool still pins the interpreter even when capable
+    svc = ElasticityService(assembly="paop_pallas", pallas_interpret=True)
+    assert svc.pallas_lane == "interpret"
+
+
+def test_build_hierarchy_threads_lane(monkeypatch):
+    """Unlike the deferred-materials batched solver, build_hierarchy
+    APPLIES the operator at construction (smoother power iterations),
+    so it must already run the resolved lane — a compiled request on an
+    incapable backend is recorded (and executed) as interpret on every
+    pallas level."""
+    from repro.solvers.gmg import build_hierarchy
+
+    backend = jax.default_backend()
+    monkeypatch.setitem(ops._SUPPORT_CACHE, backend, False)
+    gmg = build_hierarchy(
+        beam_hex(), 0, 2, assembly="paop_pallas", pallas_lane="compiled"
+    )
+    assert gmg.fine.operator.pallas_lane == "interpret"
+    gmg = build_hierarchy(
+        beam_hex(), 0, 2, assembly="paop_pallas", pallas_interpret=True
+    )
+    assert gmg.fine.operator.pallas_lane == "interpret"
+
+
+# -- slow: solver differentials at p = 4 and p = 6 ---------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("p", [4, 6])
+def test_solver_lane_differential(p):
+    """compiled vs interpret vs the einsum paop reference at high
+    order: identical iteration counts, matching solutions."""
+    si, ri = _solve(p, "paop_pallas", "interpret")
+    sc, rc = _solve(p, "paop_pallas", "compiled")
+    _, ref = _solve(p, "paop")
+    assert si.pallas_lane == "interpret"
+    assert sc.pallas_lane == (
+        "compiled" if ops.backend_supports_compiled() else "interpret"
+    )
+    # lanes of the SAME kernel: bitwise when compiled fell back
+    _assert_same_solve(
+        rc, ri, f"p={p} compiled vs interpret",
+        exact=sc.pallas_lane == "interpret",
+    )
+    # kernel vs einsum reference assembly
+    _assert_same_solve(ri, ref, f"p={p} paop_pallas vs paop")
+    assert bool(np.all(np.asarray(ref.converged)))
+
+
+# -- slow: service differential ----------------------------------------------
+
+
+@pytest.mark.slow
+def test_service_lane_differential():
+    """The generational service path reports identical outcomes per
+    lane at p=4, and each report's solver ran the resolved lane."""
+    reports = {}
+    for lane in ("interpret", "compiled"):
+        svc = ElasticityService(
+            assembly="paop_pallas", pallas_lane=lane, maxiter=MAXITER
+        )
+        reqs = [
+            SolveRequest(p=4, refine=0, materials=m, traction=tuple(t),
+                         rel_tol=1e-8, keep_solution=True)
+            for m, t in zip(MATS, TRACTIONS)
+        ]
+        reports[lane] = svc.solve(reqs)
+        assert svc.pallas_lane == (
+            lane if lane == "interpret"
+            else ("compiled" if ops.backend_supports_compiled()
+                  else "interpret")
+        )
+    for a, b in zip(reports["interpret"], reports["compiled"]):
+        assert a.iterations == b.iterations
+        assert a.converged and b.converged
+        np.testing.assert_allclose(
+            np.asarray(a.x), np.asarray(b.x),
+            atol=1e-10 * (float(np.abs(np.asarray(a.x)).max()) or 1.0),
+            rtol=0,
+        )
+
+
+# -- slow + multidevice: sharded lane differential ---------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.multidevice
+def test_sharded_lane_differential():
+    """Scenario-sharding over 8 virtual devices composes with the lane
+    machinery: the sharded compiled-lane solve reproduces the unsharded
+    interpret-lane solve at p=4."""
+    if jax.device_count() < 8:
+        pytest.skip(f"needs 8 devices, have {jax.device_count()}")
+    mats, tr, tol = [], [], []
+    for i in range(8):
+        mats.append({1: (50.0 + 3.0 * (i % 3), 50.0), 2: (1.0 + 0.25 * (i % 2), 1.0)})
+        tr.append((0.0, 1e-3 * (i % 2), -1e-2))
+        tol.append(1e-8)
+    tr, tol = np.asarray(tr), np.asarray(tol)
+    _, ref = _solve(4, "paop_pallas", "interpret", mats=mats, tr=tr, tol=tol)
+    ss, rs = _solve(4, "paop_pallas", "compiled", mesh=scenario_mesh(8),
+                    mats=mats, tr=tr, tol=tol)
+    assert ss.n_shards == 8
+    # sharded partitioning fuses differently: ~ulp, not bitwise
+    _assert_same_solve(rs, ref, "sharded compiled vs unsharded interpret")

@@ -1,10 +1,13 @@
-"""Pallas PAop kernel: shape/dtype sweep against the pure-jnp oracle."""
+"""Pallas PAop kernel: shape/dtype sweep against the pure-jnp oracle,
+lane resolution (compiled vs interpret with automatic fallback), and the
+VMEM block-size estimator invariants."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypothesis_compat import given, settings, st
 from repro.core.basis import basis_tables
 from repro.kernels.pa_elasticity import ops
 from repro.kernels.pa_elasticity.ref import paop_ref
@@ -105,3 +108,117 @@ def test_vmem_budget_respected():
         eb = ops.elements_per_block(p, ne=1 << 20)
         assert ops.block_workingset_bytes(p, eb) <= ops.VMEM_BUDGET_BYTES
         assert eb >= 8
+
+
+# -- lane resolution ---------------------------------------------------------
+
+
+def test_resolve_lane_basics():
+    assert ops.resolve_lane("interpret") == "interpret"
+    assert ops.resolve_lane(None, interpret=True) == "interpret"
+    # auto (and the legacy interpret=False/None) resolves to a real lane
+    for lane in (ops.resolve_lane("auto"), ops.resolve_lane(None),
+                 ops.resolve_lane(None, interpret=False)):
+        assert lane in ("compiled", "interpret")
+    with pytest.raises(ValueError, match="pallas lane"):
+        ops.resolve_lane("fast")
+
+
+def test_resolve_lane_follows_backend_capability(monkeypatch):
+    """auto/compiled resolve from the capability probe; an explicit
+    interpret request always pins the interpreter."""
+    backend = jax.default_backend()
+    monkeypatch.setitem(ops._SUPPORT_CACHE, backend, True)
+    assert ops.resolve_lane("auto") == "compiled"
+    assert ops.resolve_lane("compiled") == "compiled"
+    assert ops.resolve_lane(None, interpret=False) == "compiled"
+    assert ops.resolve_lane("interpret") == "interpret"
+    monkeypatch.setitem(ops._SUPPORT_CACHE, backend, False)
+    assert ops.resolve_lane("auto") == "interpret"
+    assert ops.resolve_lane("compiled") == "interpret"  # automatic fallback
+
+
+def test_backend_supports_compiled_never_on_cpu():
+    """CPU has no Mosaic/Triton lowering; the probe must say so without
+    even attempting a compile (and the answer is cached)."""
+    assert ops.backend_supports_compiled("cpu") is False
+    assert ops._SUPPORT_CACHE["cpu"] is False
+
+
+@pytest.mark.parametrize("p", [1, 2, 3, 4, 5, 6, 7, 8])
+def test_compiled_lane_matches_interpret(p):
+    """The compiled lane agrees with the interpreter to machine
+    precision for every p in 1..8.  On backends without native Pallas
+    lowering the compiled request falls back to the interpreter and the
+    outputs are bitwise identical — which is exactly the fallback
+    contract this locks down."""
+    x, lam, mu, jinv, B, G = _setup(p, 4, jnp.float32)
+    yi = ops.pa_elasticity(x, lam, mu, jinv, B, G, eb=2, lane="interpret")
+    yc = ops.pa_elasticity(x, lam, mu, jinv, B, G, eb=2, lane="compiled")
+    if ops.backend_supports_compiled():
+        scale = float(jnp.abs(yi).max())
+        np.testing.assert_allclose(np.asarray(yc), np.asarray(yi),
+                                   atol=1e-6 * scale, rtol=1e-6)
+    else:
+        np.testing.assert_array_equal(np.asarray(yc), np.asarray(yi))
+
+
+# -- VMEM estimator: real q1d and call-time budget check ---------------------
+
+
+def test_workingset_uses_real_q1d():
+    """The estimator defaults to the p+2 Gauss rule but must budget
+    against the actual quadrature when one is passed."""
+    p = 4
+    assert (ops.block_workingset_bytes(p, 8, q1d=p + 2)
+            == ops.block_workingset_bytes(p, 8))
+    assert (ops.block_workingset_bytes(p, 8, q1d=12)
+            > ops.block_workingset_bytes(p, 8))
+    eb_default = ops.elements_per_block(p, 1 << 20)
+    eb_rich = ops.elements_per_block(p, 1 << 20, q1d=12)
+    assert eb_rich < eb_default
+    assert (ops.block_workingset_bytes(p, eb_rich, q1d=12)
+            <= ops.VMEM_BUDGET_BYTES)
+
+
+def test_call_time_vmem_budget_assertion():
+    """An explicit eb whose working set (at the REAL q1d read off
+    lam_w) exceeds the budget must fail loudly at call time, not
+    silently over-allocate VMEM."""
+    ne, p, q1 = 64, 8, 10
+    d1 = p + 1
+    x = jnp.zeros((ne, 3, d1, d1, d1), jnp.float64)
+    lam = jnp.ones((ne, q1, q1, q1), jnp.float64)
+    jinv = jnp.eye(3, dtype=jnp.float64)
+    B = jnp.zeros((q1, d1), jnp.float64)
+    assert ops.block_workingset_bytes(p, ne, 8, q1) > ops.VMEM_BUDGET_BYTES
+    with pytest.raises(ValueError, match="VMEM budget"):
+        ops.pa_elasticity(x, lam, lam, jinv, B, B, eb=ne, interpret=True)
+
+
+# -- clamp invariants (property) ---------------------------------------------
+
+
+@settings(max_examples=300, deadline=None)
+@given(ne=st.integers(1, 4096), p=st.integers(1, 8),
+       scale=st.integers(0, 12))
+def test_clamp_invariants_property(ne, p, scale):
+    """Over ne in [1, 4096] and the estimator's whole p range: the
+    clamped block is within [1, ne], never larger than the request,
+    keeps at least half the requested occupancy, and pads by at most
+    one element per grid step (nblocks - 1) — the bound the old
+    return-the-request fallback violated for e.g. prime ne."""
+    eb_req = ops.elements_per_block(p, 1 << 20) >> scale  # walk the range
+    eb_req = max(1, eb_req)
+    got = ops.clamp_elements_per_block(eb_req, ne)
+    ebc = max(1, min(eb_req, ne))
+    assert 1 <= got <= ebc
+    assert 2 * got > ebc  # occupancy: never below half the request
+    nblocks = -(-ne // got)
+    pad = nblocks * got - ne
+    assert pad <= nblocks - 1
+    # divisor preference: an exact divisor in (ebc/2, ebc] wins (pad 0)
+    best = max((d for d in range(1, ebc + 1)
+                if ne % d == 0 and 2 * d > ebc), default=None)
+    if best is not None:
+        assert got == best and pad == 0
