@@ -233,6 +233,7 @@ def run_continuous(
     chunk_policy: str = "fixed",
     mesh=None,
     hetero: bool = False,
+    precision: str = "f64",
 ) -> list[dict]:
     """Continuous vs generational on the mixed-tolerance workload.
 
@@ -250,10 +251,12 @@ def run_continuous(
     from repro.serve.elasticity_service import ElasticityService
 
     n = 2 * batch if n_requests is None else n_requests
-    svc_gen = ElasticityService(max_batch=batch, mesh=mesh)
+    svc_gen = ElasticityService(
+        max_batch=batch, mesh=mesh, precision=precision
+    )
     svc_cont = ElasticityService(
         max_batch=batch, chunk_iters=chunk_iters,
-        chunk_policy=chunk_policy, mesh=mesh,
+        chunk_policy=chunk_policy, mesh=mesh, precision=precision,
     )
     # Warm: hierarchy build + one compile per (bucket, reset-flag) the
     # workload visits (16, 8, ... as the continuous tail drains).
@@ -345,6 +348,7 @@ def write_serving_artifact(rows: list[dict], args, out: str) -> None:
             "devices": args.devices or 1,
             "heterogeneous": bool(args.heterogeneous),
             "repeats": args.repeats,
+            "precision_policy": args.precision,
         },
         "rows": [
             {
@@ -386,6 +390,11 @@ def main() -> None:
                     help="chunk scheduler for --continuous (identical "
                          "numerics; scheduler-stats columns show the "
                          "chunks/waste difference)")
+    ap.add_argument("--precision", default="f64",
+                    choices=["f64", "f32", "mixed", "mixed-bf16"],
+                    help="precision policy both services run the "
+                         "workload under (recorded in the artifact's "
+                         "workload block)")
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--devices", type=int, default=None,
                     help="shard the scenario axis over N devices (forces "
@@ -422,6 +431,7 @@ def main() -> None:
             chunk_policy=args.chunk_policy,
             mesh=mesh,
             hetero=args.heterogeneous,
+            precision=args.precision,
         )
         print(
             fmt_table(

@@ -21,15 +21,17 @@ import os
 
 from benchmarks.common import fmt_table
 from benchmarks.table5_flops import analytic_flops_per_elem
+from repro.core.flops import default_q1d
 from repro.launch.roofline import V5E, place_measured
+from repro.obs.throughput import streaming_bytes_per_elem
 
 
 def analytic_rows(ps=(1, 2, 4, 8), itemsize=4):
     rows = []
     for p in ps:
-        D, Q = p + 1, p + 2
+        D, Q = p + 1, default_q1d(p)
         a = analytic_flops_per_elem(p)
-        stream = itemsize * (2 * 3 * D**3 + 2 * Q**3)
+        stream = streaming_bytes_per_elem(p, itemsize)
         # baseline additionally streams QVec (9 ch, fwd+bwd) + dense G3D
         qvec = itemsize * 2 * 9 * Q**3
         g3d = itemsize * (3 * D**3) * (3 * Q**3)
@@ -86,6 +88,7 @@ def measured_rows(artifact="BENCH_operator_sweep.json"):
             "p": r["p"],
             "assembly": r["assembly"],
             "pallas_lane": r.get("pallas_lane", "none"),
+            "precision": r.get("precision_policy", "f64"),
             "batch": r["batch"],
             "dofs_per_s": r["dofs_per_s"],
             "gbytes_per_s": r["gbytes_per_s"],
@@ -119,9 +122,9 @@ def main(fast: bool = False):
         print()
         print(fmt_table(
             mrows,
-            ["p", "assembly", "pallas_lane", "batch", "dofs_per_s",
-             "gbytes_per_s", "oi_measured_at", "v5e_roof_fraction",
-             "v5e_bound"],
+            ["p", "assembly", "pallas_lane", "precision", "batch",
+             "dofs_per_s", "gbytes_per_s", "oi_measured_at",
+             "v5e_roof_fraction", "v5e_bound"],
             title="Measured batched operator on the v5e roofline "
                   "(BENCH_operator_sweep.json; lane column is the lane "
                   "that ran — trajectory, not absolute)",

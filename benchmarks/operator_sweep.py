@@ -14,9 +14,16 @@ the row's placement on the TPU v5e roofline
 ``compiled`` request on a backend that cannot lower Pallas is recorded
 as the interpret run it really was (``lane_requested`` keeps the ask).
 
+``--precision`` sweeps the measurement over precision policies
+(``f64`` by default; add ``f32`` / ``mixed`` / ``mixed-bf16`` for the
+mixed-precision trajectory).  Each row is measured at its policy's
+``precond_dtype`` — the dtype the V-cycle element kernel streams, which
+is where the bandwidth-bound bytes live — and records
+``precision_policy`` so the artifact carries the axis.
+
 Absolute numbers on this container are CPU-sized — tiny, and that is
 fine: the artifact is schema-versioned
-(``repro.bench.operator_sweep/v2``, schema checked into
+(``repro.bench.operator_sweep/v3``, schema checked into
 ``benchmarks/schemas/``) so successive perf PRs append comparable
 points, and ``fig6_roofline`` places the measured rows next to the
 analytic OI trajectory.  The emitted document is validated against the
@@ -25,7 +32,7 @@ producer, not just the CI consumer.
 
     PYTHONPATH=src python -m benchmarks.operator_sweep --smoke
     PYTHONPATH=src python -m benchmarks.operator_sweep \
-        --out BENCH_operator_sweep.json --batch 4
+        --out BENCH_operator_sweep.json --batch 4 --precision f64 f32
 """
 
 from __future__ import annotations
@@ -42,7 +49,7 @@ jax.config.update("jax_enable_x64", True)
 
 from benchmarks.common import fmt_table  # noqa: E402
 
-SCHEMA = "repro.bench.operator_sweep/v2"
+SCHEMA = "repro.bench.operator_sweep/v3"
 SCHEMA_PATH = os.path.join(
     os.path.dirname(__file__), "schemas", "bench_operator_sweep.schema.json"
 )
@@ -65,9 +72,10 @@ def run(
     min_time_s: float = 0.05,
     smoke: bool = False,
     lanes=SWEEP_LANES,
+    precisions=("f64",),
 ) -> list[dict]:
-    """Artifact rows: per p, one ``paop`` baseline plus one
-    ``paop_pallas`` row per requested lane (measured + models +
+    """Artifact rows: per (p, precision policy), one ``paop`` baseline
+    plus one ``paop_pallas`` row per requested lane (measured + models +
     roofline placement).  ``--smoke`` shrinks to refine 0 / batch 2 /
     single short repeat — same code path, same schema, CI-sized."""
     from repro.launch.roofline import place_measured
@@ -76,18 +84,20 @@ def run(
     cells = []
     for p in ps:
         r = 0 if smoke else (refine if refine is not None else SWEEP_REFINE[p])
-        cells.append((p, r, "paop", None))
-        for lane in lanes:
-            cells.append((p, r, "paop_pallas", lane))
+        for prec in precisions:
+            cells.append((p, r, "paop", None, prec))
+            for lane in lanes:
+                cells.append((p, r, "paop_pallas", lane, prec))
 
     rows = []
-    for p, r, assembly, lane in cells:
+    for p, r, assembly, lane, prec in cells:
         row = operator_throughput(
             p,
             r,
             2 if smoke else batch,
             assembly=assembly,
             pallas_lane=lane,
+            precision=prec,
             repeats=1 if smoke else repeats,
             min_time_s=0.0 if smoke else min_time_s,
         )
@@ -149,6 +159,11 @@ def main() -> None:
                     choices=["auto", "compiled", "interpret"],
                     help="requested paop_pallas lanes swept per p (rows "
                          "record the lane that actually ran)")
+    ap.add_argument("--precision", nargs="+", default=["f64"],
+                    choices=["f64", "f32", "mixed", "mixed-bf16"],
+                    help="precision policies swept per p (each row is "
+                         "measured at the policy's precond_dtype — the "
+                         "bytes the V-cycle element kernel streams)")
     ap.add_argument("--refine", type=int, default=None,
                     help="override the per-p refinement map")
     ap.add_argument("--repeats", type=int, default=3)
@@ -165,10 +180,12 @@ def main() -> None:
         repeats=args.repeats,
         smoke=args.smoke,
         lanes=tuple(args.lanes),
+        precisions=tuple(args.precision),
     )
     print(fmt_table(
         rows,
-        ["p", "assembly", "pallas_lane", "refine", "batch", "dofs",
+        ["p", "assembly", "pallas_lane", "precision_policy", "refine",
+         "batch", "dofs",
          "t_apply_s", "dofs_per_s", "gbytes_per_s", "oi_model",
          "v5e_roof_fraction", "v5e_bound"],
         title=(

@@ -1,14 +1,30 @@
-"""Analytic FLOP counts for the elasticity operator (paper Table 5)."""
+"""Analytic FLOP counts for the elasticity operator (paper Table 5).
+
+:func:`default_q1d` is the single source of truth for the 1D quadrature
+count — the streaming-bytes model (``repro.obs.throughput``), the
+roofline script (``benchmarks/fig6_roofline``) and the kernel's VMEM
+budgeting (``repro.kernels.pa_elasticity.ops``) all derive Q from it,
+so the analytic models cannot drift from what the kernel actually
+streams.  Call sites that know the *real* q1d (read off ``lam_w``'s
+trailing axis) pass it explicitly.
+"""
 
 from __future__ import annotations
 
-__all__ = ["paop_flops_per_elem", "dense_flops_per_elem"]
+__all__ = ["default_q1d", "paop_flops_per_elem", "dense_flops_per_elem"]
 
 
-def paop_flops_per_elem(p: int) -> float:
+def default_q1d(p: int) -> int:
+    """1D quadrature-point count for degree ``p``: the paper's p+2
+    Gauss rule (exact for the bilinear-form integrand on affine cells)."""
+    return p + 2
+
+
+def paop_flops_per_elem(p: int, q1d: int | None = None) -> float:
     """Closed-form multiply+add count of the PAop kernel per element
     (d=3 vector elasticity; forward + pointwise Voigt + backward)."""
-    D, Q = p + 1, p + 2
+    D = p + 1
+    Q = default_q1d(p) if q1d is None else q1d
     fwd = 3 * 2 * (
         2 * (Q * D * D * D)     # X contraction: u, v channels
         + 3 * (Q * Q * D * D)   # Y: d_xi, d_eta, u_xy
@@ -22,7 +38,8 @@ def paop_flops_per_elem(p: int) -> float:
     return float(fwd + geom + stress + bwd)
 
 
-def dense_flops_per_elem(p: int) -> float:
+def dense_flops_per_elem(p: int, q1d: int | None = None) -> float:
     """Dense G3D contraction cost (the MFEM v4.8 baseline's O((p+1)^6))."""
-    D, Q = p + 1, p + 2
+    D = p + 1
+    Q = default_q1d(p) if q1d is None else q1d
     return float(2 * 2 * (3 * D**3) * (3 * 3 * Q**3))

@@ -1,0 +1,143 @@
+"""Precision policies for the GMG-PCG stack (mixed-precision axis).
+
+The PAop operator is bandwidth-bound across the whole p = 1..8 sweep
+(every committed ``BENCH_operator_sweep.json`` row lands on the memory
+side of the roofline), so halving bytes-per-apply is the biggest
+remaining kernel-time lever — the direction "Towards a Higher Roofline
+for Matrix-Vector Multiplication in Matrix-Free HOSFEM" takes.  A
+:class:`PrecisionPolicy` names which dtype each tier of the solve runs
+in:
+
+* ``solve_dtype`` — the outer Krylov iteration: the ``BpcgState``
+  vectors (x, r, z, d), the operator apply inside the CG recurrence,
+  and — critically — the residual norms and tolerance thresholds.
+  Keeping this at f64 is what makes the ``mixed`` policy safe: the
+  stopping test is always evaluated in f64 arithmetic against the
+  caller's tolerance, regardless of how sloppy the preconditioner is.
+* ``precond_dtype`` — everything inside the GMG V-cycle: the per-level
+  weighted material fields (the bytes the element kernel actually
+  streams), the Chebyshev smoother (dinv, lambda_max, recurrence),
+  and the inter-grid transfers.  A preconditioner is only required to
+  be a fixed SPD operator — reduced precision here perturbs the
+  convergence *rate*, never the answer the outer loop accepts.
+* ``coarse_dtype`` — the coarsest-level probe + dense Cholesky factor
+  and the per-chunk triangular solves.  Kept separate because bf16
+  has too few mantissa bits to factor even well-conditioned coarse
+  blocks (``mixed-bf16`` holds the coarse solve at f32).
+
+Built-in policies (see :data:`PRECISION_POLICIES`):
+
+==============  ===========  =============  ============
+name            solve_dtype  precond_dtype  coarse_dtype
+==============  ===========  =============  ============
+``f64``         float64      float64        float64
+``f32``         float32      float32        float32
+``mixed``       float64      float32        float32
+``mixed-bf16``  float64      bfloat16       float32
+==============  ===========  =============  ============
+
+The policy rides the prep pytree implicitly: a
+:class:`~repro.solvers.batched.BatchedGMGSolver` resolves its policy at
+construction and every prep leaf it produces carries the corresponding
+dtype (the reduced policies additionally carry a ``solve_dtype`` copy
+of the *fine-level* weighted fields, because the outer Krylov streams
+the fine operator at full precision while the smoother streams it
+reduced).  ``policy.name`` participates in the service compile-cache
+key and the prep-reuse content digest, is recorded in every BENCH row
+(``precision_policy``) and labels the service metrics.
+
+Safety story: reduced-precision cycles can stagnate when the requested
+tolerance sits below the reduced dtype's attainable residual floor.
+The batched solver detects this per scenario (masked, exactly like
+per-scenario convergence) and the solve/serving layers re-solve only
+the affected rows under the ``f64`` policy — see
+:func:`repro.solvers.batched.bpcg_chunk` (stall counters) and
+``docs/PRECISION.md`` for the contract.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+__all__ = ["PrecisionPolicy", "PRECISION_POLICIES", "resolve_precision"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Dtype assignment for the tiers of one GMG-PCG solve (static
+    metadata — hashable, usable in compile-cache keys)."""
+
+    name: str
+    solve_dtype: Any  # outer Krylov vectors + residual/tolerance accounting
+    precond_dtype: Any  # smoother, transfers, element kernel in the V-cycle
+    coarse_dtype: Any  # coarse probe + Cholesky factor/solve
+
+    @property
+    def uniform(self) -> bool:
+        """True when every tier runs one dtype (no cast boundaries)."""
+        return (
+            self.solve_dtype == self.precond_dtype
+            and self.solve_dtype == self.coarse_dtype
+        )
+
+    @property
+    def reduced(self) -> bool:
+        """True when any tier runs below float64 — exactly the policies
+        covered by the stagnation-detection + f64-fallback contract."""
+        return not (
+            self.solve_dtype == jnp.float64
+            and self.precond_dtype == jnp.float64
+            and self.coarse_dtype == jnp.float64
+        )
+
+
+PRECISION_POLICIES: dict[str, PrecisionPolicy] = {
+    "f64": PrecisionPolicy("f64", jnp.float64, jnp.float64, jnp.float64),
+    "f32": PrecisionPolicy("f32", jnp.float32, jnp.float32, jnp.float32),
+    "mixed": PrecisionPolicy("mixed", jnp.float64, jnp.float32, jnp.float32),
+    "mixed-bf16": PrecisionPolicy(
+        "mixed-bf16", jnp.float64, jnp.bfloat16, jnp.float32
+    ),
+}
+
+
+def resolve_precision(
+    precision: str | PrecisionPolicy | None, dtype=None
+) -> PrecisionPolicy:
+    """Resolve a precision request to a :class:`PrecisionPolicy`.
+
+    ``precision`` is a policy name (``"f64"``, ``"f32"``, ``"mixed"``,
+    ``"mixed-bf16"``), an explicit policy object, or None — meaning
+    "derive from the legacy ``dtype`` argument": f64 (or no dtype)
+    resolves to the ``f64`` policy, f32 to ``f32``, and any other
+    uniform dtype to an ad-hoc uniform policy named after it.  Passing
+    both a policy and a conflicting ``dtype`` is an error — the policy
+    is the single source of dtype truth."""
+    if isinstance(precision, PrecisionPolicy):
+        pol = precision
+    elif precision is None:
+        if dtype is None or jnp.dtype(dtype) == jnp.dtype(jnp.float64):
+            return PRECISION_POLICIES["f64"]
+        for pol in PRECISION_POLICIES.values():
+            if pol.uniform and jnp.dtype(pol.solve_dtype) == jnp.dtype(dtype):
+                return pol
+        return PrecisionPolicy(str(jnp.dtype(dtype)), dtype, dtype, dtype)
+    else:
+        try:
+            pol = PRECISION_POLICIES[precision]
+        except KeyError:
+            raise ValueError(
+                f"unknown precision policy {precision!r}; expected one "
+                f"of {tuple(PRECISION_POLICIES)} or a PrecisionPolicy"
+            ) from None
+    if dtype is not None and jnp.dtype(dtype) != jnp.dtype(pol.solve_dtype):
+        raise ValueError(
+            f"precision policy {pol.name!r} solves in "
+            f"{jnp.dtype(pol.solve_dtype)} but dtype="
+            f"{jnp.dtype(dtype)} was also requested; pass one or the "
+            f"other"
+        )
+    return pol

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.flops import default_q1d
 from repro.kernels.pa_elasticity.pa_elasticity import pa_elasticity_pallas
 
 __all__ = [
@@ -119,12 +120,13 @@ def block_workingset_bytes(
     sweep buffers live at the forward/backward seam (the 9-channel
     ``ghat`` stack of the naive dataflow is never materialized).
 
-    ``q1d`` defaults to the p+2 Gauss rule but MUST be passed when the
-    kernel runs a different quadrature — ``pa_elasticity`` reads the
+    ``q1d`` defaults to :func:`repro.core.flops.default_q1d` (the same
+    helper the streaming-bytes/OI models use) but MUST be passed when
+    the kernel runs a different quadrature — ``pa_elasticity`` reads the
     real ``q1d`` off ``lam_w`` and threads it here, so a non-default
     rule budgets VMEM against the truth instead of the default."""
     d1 = p + 1
-    q1 = (p + 2) if q1d is None else q1d
+    q1 = default_q1d(p) if q1d is None else q1d
     per_elem = (
         2 * 3 * d1 ** 3  # x, y
         + 2 * q1 ** 3  # lambda_w, mu_w

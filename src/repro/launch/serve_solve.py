@@ -147,6 +147,15 @@ def main() -> None:
                          "interpret fallback on backends that cannot "
                          "lower Pallas (the service reports the lane "
                          "that actually ran)")
+    ap.add_argument("--precision", default="f64",
+                    choices=["f64", "f32", "mixed", "mixed-bf16"],
+                    help="service-default precision policy (requests may "
+                         "still name their own): f64, f32 (uniform), or "
+                         "mixed / mixed-bf16 (f64 outer Krylov over a "
+                         "reduced-precision V-cycle).  Reduced policies "
+                         "auto-fall-back stagnated rows to f64 — the "
+                         "report's prec column shows the policy that "
+                         "produced each answer, * marks a fallback")
     ap.add_argument("--repeat", type=int, default=1,
                     help="re-run the workload to demonstrate cache hits")
     ap.add_argument("--continuous", action="store_true",
@@ -207,7 +216,7 @@ def main() -> None:
         spans = SpanRecorder()
     service = ElasticityService(
         max_batch=args.max_batch, assembly=args.assembly,
-        pallas_lane=args.pallas_lane,
+        pallas_lane=args.pallas_lane, precision=args.precision,
         chunk_iters=args.chunk_iters, chunk_policy=args.chunk_policy,
         min_chunk=args.min_chunk, max_chunk=args.max_chunk, mesh=mesh,
         spans=spans,
@@ -233,16 +242,17 @@ def main() -> None:
             f"({len(reports) / dt:.2f} scenarios/s)"
         )
         print(
-            f"{'i':>3} {'key':16s} {'ndof':>7} {'iters':>5} {'conv':>5} "
-            f"{'rel_norm':>9} {'hit':>4} {'rows':>7} {'setup(s)':>8} "
-            f"{'solve(s)':>8}"
+            f"{'i':>3} {'key':16s} {'prec':>7} {'ndof':>7} {'iters':>5} "
+            f"{'conv':>5} {'rel_norm':>9} {'hit':>4} {'rows':>7} "
+            f"{'setup(s)':>8} {'solve(s)':>8}"
         )
         for i, rep in enumerate(reports):
             p, refine, shape = rep.key[:3]
             short_key = f"p{p}/r{refine}/{'x'.join(map(str, shape))}"
             rows = f"{rep.batch_size}/{rep.padded_rows}"
+            prec = rep.precision + ("*" if rep.fallback else "")
             print(
-                f"{i:>3} {short_key:16s} {rep.ndof:>7} "
+                f"{i:>3} {short_key:16s} {prec:>7} {rep.ndof:>7} "
                 f"{rep.iterations:>5} {str(rep.converged):>5} "
                 f"{rep.final_rel_norm:>9.2e} {str(rep.cache_hit):>4} "
                 f"{rows:>7} {rep.t_setup:>8.3f} {rep.t_solve:>8.3f}"

@@ -31,7 +31,12 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core.flops import dense_flops_per_elem, paop_flops_per_elem
+from repro.core.flops import (
+    default_q1d,
+    dense_flops_per_elem,
+    paop_flops_per_elem,
+)
+from repro.core.precision import resolve_precision
 
 __all__ = [
     "streaming_bytes_per_elem",
@@ -40,21 +45,24 @@ __all__ = [
 ]
 
 
-def streaming_bytes_per_elem(p: int, itemsize: int) -> int:
+def streaming_bytes_per_elem(p: int, itemsize: int, q1d: int | None = None) -> int:
     """PAop streaming-bytes model per element per apply: the 3-channel
     ``x_e`` read + ``y_e`` write (D^3 nodes) and the two weighted
     material fields (Q^3 points).  Basis tables and all intermediates
-    are on-chip by construction (paper Sec. 4.5)."""
-    D, Q = p + 1, p + 2
+    are on-chip by construction (paper Sec. 4.5).  ``q1d`` defaults to
+    :func:`repro.core.flops.default_q1d`; pass the real quadrature
+    count (``lam_w.shape[-1]``) when you have an operator in hand."""
+    D = p + 1
+    Q = default_q1d(p) if q1d is None else q1d
     return itemsize * (2 * 3 * D**3 + 2 * Q**3)
 
 
-def model_flops_per_elem(p: int, assembly: str) -> float:
+def model_flops_per_elem(p: int, assembly: str, q1d: int | None = None) -> float:
     """Analytic per-element FLOPs of one operator apply for the
     assembly family being measured (sum-factorized vs dense baseline)."""
     if assembly == "pa_baseline":
-        return dense_flops_per_elem(p)
-    return paop_flops_per_elem(p)
+        return dense_flops_per_elem(p, q1d)
+    return paop_flops_per_elem(p, q1d)
 
 
 def _fenced_median_time(fn, x, *, warmup: int, repeats: int,
@@ -94,7 +102,8 @@ def operator_throughput(
     batch: int,
     *,
     assembly: str = "paop",
-    dtype=jnp.float64,
+    dtype=None,
+    precision: str | None = None,
     repeats: int = 3,
     min_time_s: float = 0.05,
     pallas_interpret: bool | None = None,
@@ -115,11 +124,20 @@ def operator_throughput(
     ``"none"`` for assemblies that never enter Pallas) next to the lane
     that was *requested* (``lane_requested``) — so a sweep that asks for
     ``compiled`` on a backend that cannot lower Pallas is recorded as
-    the interpret run it really was."""
+    the interpret run it really was.
+
+    ``precision`` names a :class:`~repro.core.precision.PrecisionPolicy`;
+    the operator is measured at the policy's ``precond_dtype`` — the
+    dtype the V-cycle element kernel streams under that policy, which is
+    where the bandwidth-bound bytes live — and the row records
+    ``precision_policy`` so the artifact carries the axis.  The legacy
+    ``dtype`` argument still works for uniform-dtype measurements."""
     from repro.core.operators import ElasticityOperator
     from repro.fem.mesh import beam_hex
     from repro.fem.space import H1Space
 
+    policy = resolve_precision(precision, dtype)
+    dtype = policy.precond_dtype
     lane_requested = (
         pallas_lane
         if pallas_lane is not None
@@ -151,8 +169,12 @@ def operator_throughput(
     itemsize = jnp.dtype(dtype).itemsize
     nelem = space.nelem * batch  # folded scenario-element axis
     dofs = space.ndof * batch
-    bytes_per_apply = streaming_bytes_per_elem(p, itemsize) * nelem
-    flops_per_apply = model_flops_per_elem(p, assembly) * nelem
+    # Real quadrature count off the bound material field — the same
+    # number the kernel's VMEM budgeting sees — so the bytes/OI model
+    # cannot drift from what the kernel actually streams.
+    q1d = int(op.lam_w.shape[-1]) if op.lam_w is not None else None
+    bytes_per_apply = streaming_bytes_per_elem(p, itemsize, q1d) * nelem
+    flops_per_apply = model_flops_per_elem(p, assembly, q1d) * nelem
     return {
         "p": int(p),
         "refine": int(refine),
@@ -162,6 +184,7 @@ def operator_throughput(
         "lane_requested": lane_requested,
         "pallas_interpret": bool(lane_ran == "interpret"),
         "dtype": str(jnp.dtype(dtype)),
+        "precision_policy": policy.name,
         "ndof": int(space.ndof),
         "nelem": int(space.nelem),
         "dofs": int(dofs),

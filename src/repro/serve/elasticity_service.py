@@ -98,6 +98,7 @@ from repro.core.geometry import (
     check_material_dict,
     check_material_fields,
 )
+from repro.core.precision import PrecisionPolicy, resolve_precision
 from repro.distributed.sharding import scenario_row_devices
 from repro.fem.mesh import HexMesh, beam_hex
 from repro.serve.chunk_policy import (
@@ -129,6 +130,10 @@ _STAT_HELP = {
     "rebuckets": "In-flight state re-bucketings.",
     "prep_calls": "prepare() calls (power iterations + refactorization).",
     "prep_row_copies": "Prep rows reused via content-digest match.",
+    "precision_fallbacks": (
+        "Rows a reduced-precision flight re-queued onto the f64 path "
+        "after stagnation detection."
+    ),
 }
 
 
@@ -182,7 +187,17 @@ class SolveRequest:
     dicts; shape/positivity per element for arrays) so invalid requests
     fail before any batch state is touched.  ``rel_tol`` is the
     MFEM-style relative residual tolerance; ``keep_solution`` attaches
-    the (nscalar, 3) solution vector to the report."""
+    the (nscalar, 3) solution vector to the report.
+
+    ``precision`` selects the request's
+    :class:`~repro.core.precision.PrecisionPolicy` by name (``"f64"``,
+    ``"f32"``, ``"mixed"``, ``"mixed-bf16"``); ``None`` inherits the
+    service default.  The resolved policy participates in the
+    compile-cache/flight key — requests of different policies never
+    share a compiled program — and is recorded on the report.  Rows a
+    reduced-precision flight flags as stagnated are automatically
+    re-queued (same ticket, original submit time) onto the ``f64``
+    path; their reports carry ``fallback=True``."""
 
     p: int = 2
     refine: int = 1
@@ -191,6 +206,7 @@ class SolveRequest:
     rel_tol: float = 1e-6
     coarse_mesh: HexMesh | None = None
     keep_solution: bool = False
+    precision: str | None = None
 
 
 def _req_materials(req: SolveRequest):
@@ -198,13 +214,19 @@ def _req_materials(req: SolveRequest):
     return req.materials if req.materials is not None else MATERIALS_BEAM
 
 
-def _material_digest(lam_row: np.ndarray, mu_row: np.ndarray) -> bytes:
+def _material_digest(
+    lam_row: np.ndarray, mu_row: np.ndarray, precision: str = "f64"
+) -> bytes:
     """Content digest of one folded (lam_e, mu_e) row pair.  The
     continuous engine keys prep-row reuse on this digest: two rows with
     equal digests carry bitwise-equal per-element fields (verified
     against the snapshot on match), so heterogeneous-field requests
-    short-circuit power iterations exactly like repeated dicts."""
+    short-circuit power iterations exactly like repeated dicts.  The
+    precision-policy name is folded in — prep computed at one policy's
+    dtypes (f32 weighted fields, f32 Cholesky) is not the same derived
+    data as another's, even for identical materials."""
     h = hashlib.blake2b(digest_size=16)
+    h.update(precision.encode())
     h.update(np.ascontiguousarray(lam_row))
     h.update(np.ascontiguousarray(mu_row))
     return h.digest()
@@ -238,6 +260,11 @@ class SolveReport:
     # Honest throughput math divides real requests — never padded_rows —
     # by wall-clock.
     padded_rows: int = 0
+    # Precision policy the FINISHING solve ran under; ``fallback`` marks
+    # a row the reduced-precision pass flagged as stagnated and the
+    # service re-solved on the f64 path (precision then reads "f64").
+    precision: str = "f64"
+    fallback: bool = False
     x: Any = None
 
 
@@ -323,7 +350,8 @@ class ElasticityService:
         max_batch: int = 8,
         cache_size: int = 4,
         assembly: str = "paop",
-        dtype=jnp.float64,
+        dtype=None,
+        precision: str | PrecisionPolicy | None = None,
         maxiter: int = 200,
         pallas_interpret: bool | None = None,
         pallas_lane: str | None = None,
@@ -343,7 +371,11 @@ class ElasticityService:
         self.max_batch = max_batch
         self.cache_size = cache_size
         self.assembly = assembly
-        self.dtype = dtype
+        # Service-default precision policy (requests override per row
+        # via SolveRequest.precision).  ``dtype`` is the legacy uniform
+        # spelling; ``self.dtype`` stays the resolved solve dtype.
+        self.precision = resolve_precision(precision, dtype)
+        self.dtype = self.precision.solve_dtype
         self.maxiter = maxiter
         # Pallas lane for every solver this service builds, resolved at
         # construction ("compiled" or "interpret"; "auto" — the default
@@ -381,6 +413,10 @@ class ElasticityService:
         self._queue: list[tuple[int, SolveRequest]] = []
         self._flights: dict[tuple, _Flight] = {}
         self._completed: dict[int, SolveReport] = {}
+        # Tickets the continuous engine re-queued onto the f64 path
+        # after a reduced-precision flight flagged them as stagnated;
+        # their eventual reports carry fallback=True.
+        self._fallback_tickets: set[int] = set()
         self._next_ticket = 0
         # Observability: every counter the service used to keep in a
         # plain ``stats`` dict now lives on a typed metrics registry,
@@ -411,12 +447,13 @@ class ElasticityService:
         recorder.thread_name(0, "engine")
 
     def _labels(self, key: tuple) -> dict:
-        """The uniform service label set for a discretization key."""
+        """The uniform service label set for a flight key."""
         return {
             "p": key[0],
             "refine": key[1],
             "policy": self.chunk_policy.name,
             "devices": self.n_shards,
+            "precision": key[-1],
         }
 
     def _inc(self, stat: str, key: tuple, n: int = 1) -> None:
@@ -442,12 +479,20 @@ class ElasticityService:
         return out
 
     # -- queue ---------------------------------------------------------------
-    @staticmethod
-    def group_key(req: SolveRequest) -> tuple:
-        """Discretization key.  Leads with (p, refine, shape) but also
-        covers everything else a compiled program is specialized on —
-        lengths, attribute layout and the affine map — so two meshes of
-        equal shape but different geometry never share a solver."""
+    def _policy_for(self, req: SolveRequest) -> PrecisionPolicy:
+        """The request's resolved precision policy (service default when
+        the request doesn't name one)."""
+        if req.precision is None:
+            return self.precision
+        return resolve_precision(req.precision)
+
+    def group_key(self, req: SolveRequest) -> tuple:
+        """Flight/compile-cache key.  Leads with (p, refine, shape) but
+        also covers everything else a compiled program is specialized
+        on — lengths, attribute layout, the affine map, and (last) the
+        resolved precision-policy name: two meshes of equal shape but
+        different geometry never share a solver, and neither do two
+        policies (their programs differ in every dtype)."""
         mesh = req.coarse_mesh if req.coarse_mesh is not None else beam_hex()
         lm = mesh.linear_map
         return (
@@ -457,6 +502,7 @@ class ElasticityService:
             mesh.lengths,
             tuple(int(a) for a in mesh.attributes()),
             None if lm is None else tuple(map(tuple, np.asarray(lm).tolist())),
+            self._policy_for(req).name,
         )
 
     def submit(self, request: SolveRequest) -> int:
@@ -501,6 +547,7 @@ class ElasticityService:
                         f"{mesh.shape})"
                     ),
                 )
+        self._policy_for(request)  # unknown precision names fail at intake
         ticket = self._next_ticket
         self._next_ticket += 1
         self._t_submit[ticket] = self.clock()
@@ -533,7 +580,7 @@ class ElasticityService:
             req.refine,
             req.p,
             assembly=self.assembly,
-            dtype=self.dtype,
+            precision=self._policy_for(req),
             maxiter=self.maxiter,
             pallas_lane=self.pallas_lane,
             mesh=self.mesh,
@@ -690,6 +737,8 @@ class ElasticityService:
         nom0 = np.asarray(flight.state.nom0)
         thr = np.asarray(flight.state.threshold)
         iters = np.asarray(flight.state.iters)
+        stalled = np.asarray(flight.state.stalled)
+        reduced = resolve_precision(flight.key[-1]).reduced
         live = flight.live_rows()
         ndof = flight.solver.fine_space.ndof
         now = self.clock()
@@ -700,6 +749,21 @@ class ElasticityService:
             slot = flight.slots[i]
             req = slot.request
             converged = bool(nom[i] <= thr[i])
+            if reduced and bool(stalled[i]) and not converged:
+                # Stagnated under the reduced policy (or failed the true-
+                # residual audit): re-queue the SAME ticket onto the f64
+                # path with its original submit time, so the fallback is
+                # a scheduling event, not a failed report.  The eventual
+                # f64 report carries ``fallback=True``.
+                self._queue.append(
+                    (slot.ticket,
+                     dataclasses.replace(req, precision="f64"))
+                )
+                self._t_submit[slot.ticket] = slot.t_submit
+                self._fallback_tickets.add(slot.ticket)
+                self._inc("precision_fallbacks", flight.key)
+                flight.slots[i] = None
+                continue
             rel = (
                 float(np.sqrt(nom[i]) / np.sqrt(nom0[i]))
                 if nom0[i] > 0
@@ -732,6 +796,8 @@ class ElasticityService:
                     overhead=wall - slot.t_compute,
                     padding_overhead=slot.t_padding,
                 )
+            fell_back = slot.ticket in self._fallback_tickets
+            self._fallback_tickets.discard(slot.ticket)
             self._completed[slot.ticket] = SolveReport(
                 request=req,
                 key=flight.key,
@@ -748,6 +814,8 @@ class ElasticityService:
                     iters[i] == 0 and converged and nom0[i] == 0
                 ),
                 padded_rows=flight.bucket,
+                precision=flight.key[-1],
+                fallback=fell_back,
                 x=np.asarray(flight.state.x[i])
                 if req.keep_solution
                 else None,
@@ -861,7 +929,7 @@ class ElasticityService:
             flight.lam[row] = np.asarray(lam[0])
             flight.mu[row] = np.asarray(mu[0])
             flight.mat_digest[row] = _material_digest(
-                flight.lam[row], flight.mu[row]
+                flight.lam[row], flight.mu[row], precision=flight.key[-1]
             )
             flight.tr[row] = req.traction
             flight.tol[row] = req.rel_tol
@@ -1148,11 +1216,14 @@ class ElasticityService:
         conv = np.asarray(res.converged)
         fin = np.asarray(res.final_norm)
         ini = np.asarray(res.initial_norm)
+        fell_back = np.asarray(res.fallback)
         ndof = solver.fine_space.ndof
         out = []
         # Padding rows (s >= n_real) are internal and never reported.
         for s, req in enumerate(reqs):
             rel = float(fin[s] / ini[s]) if ini[s] > 0 else 0.0
+            if fell_back[s]:
+                self._inc("precision_fallbacks", key)
             out.append(
                 SolveReport(
                     request=req,
@@ -1168,6 +1239,8 @@ class ElasticityService:
                     t_solve=t_solve,
                     born_converged=bool(iters[s] == 0 and conv[s] and ini[s] == 0),
                     padded_rows=n_real + n_pad,
+                    precision=solver.precision.name,
+                    fallback=bool(fell_back[s]),
                     x=np.asarray(x[s]) if req.keep_solution else None,
                 )
             )

@@ -71,6 +71,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.operators import DEFER_MATERIALS, ElasticityOperator
+from repro.core.precision import PrecisionPolicy, resolve_precision
 from repro.kernels.pa_elasticity.ops import resolve_lane
 from repro.distributed.sharding import (
     device_put_scenario,
@@ -94,6 +95,7 @@ __all__ = [
     "bpcg_init",
     "bpcg_chunk",
     "bpcg_result",
+    "true_residual_audit",
     "merge_states",
     "BpcgState",
     "BPCGResult",
@@ -109,6 +111,8 @@ class BPCGResult:
     converged: Any  # (S,) bool
     final_norm: Any  # (S,) sqrt((B r, r)) at exit
     initial_norm: Any  # (S,)
+    stalled: Any  # (S,) bool — stagnation detected (reduced precision)
+    fallback: Any  # (S,) bool — row was re-solved on the f64 path
 
 
 @jax.tree_util.register_dataclass
@@ -129,6 +133,9 @@ class BpcgState:
     threshold: Any  # (S,) per-row stopping value for nom
     iters: Any  # (S,) int32 iterations since the row's (re)start
     active: Any  # (S,) bool — still iterating
+    best: Any  # (S,) lowest nom seen since the row's (re)start
+    stall: Any  # (S,) int32 consecutive low-progress iterations
+    stalled: Any  # (S,) bool — sticky stagnation flag (see bpcg_chunk)
 
 
 def _dots(a, b):
@@ -183,6 +190,9 @@ def bpcg_init(
         threshold=threshold,
         iters=jnp.zeros((s,), dtype=jnp.int32),
         active=nom0 > threshold,
+        best=nom0,
+        stall=jnp.zeros((s,), dtype=jnp.int32),
+        stalled=jnp.zeros((s,), dtype=bool),
     )
 
 
@@ -193,6 +203,8 @@ def bpcg_chunk(
     *,
     k_iters=None,
     maxiter: int = 5000,
+    stall_iters: int = 0,
+    stall_rtol: float = 0.99,
 ) -> BpcgState:
     """Advance every active row by up to ``k_iters`` PCG iterations
     (unbounded — run to convergence/``maxiter`` — when ``k_iters`` is
@@ -202,7 +214,18 @@ def bpcg_chunk(
     to 0, direction updates gated), so ``chunk(k1)`` followed by
     ``chunk(k2)`` yields the same state as one ``chunk(k1 + k2)`` call.
     ``k_iters`` may be a traced value, so one compiled program serves
-    every chunk length."""
+    every chunk length.
+
+    Stagnation detection (the reduced-precision safety net): with
+    ``stall_iters > 0``, a row that goes ``stall_iters`` consecutive
+    iterations without reducing its best-seen ``nom`` by at least a
+    factor ``stall_rtol`` is flagged ``stalled`` (sticky) and
+    deactivated — it has hit the precision floor of the arithmetic, and
+    more iterations cannot help.  Tracked per scenario with the same
+    masking as convergence, so one stuck row never holds the batch.
+    The default ``stall_iters = 0`` disables detection entirely (no
+    extra arithmetic in the loop body), keeping the f64 path
+    bit-identical to the pre-stagnation program."""
     if M is None:
         M = lambda r: r
 
@@ -236,9 +259,26 @@ def bpcg_chunk(
         # degenerate direction (den <= 0) takes no step and adds none.
         iters = st.iters + ok.astype(jnp.int32)
         active = ok & (nom > st.threshold) & (iters < maxiter)
-        new = dataclasses.replace(
-            st, x=x, r=r, z=z, d=d, nom=nom, iters=iters, active=active
-        )
+        if stall_iters > 0:
+            # Progress = the best-seen nom dropped by >= (1 - rtol);
+            # best-so-far (not last-step) so an oscillating residual
+            # doesn't reset the counter on every upswing.
+            improved = betanom < st.best * stall_rtol
+            stall = jnp.where(
+                ok, jnp.where(improved, 0, st.stall + 1), st.stall
+            )
+            best = jnp.where(ok, jnp.minimum(st.best, betanom), st.best)
+            hit = active & (stall >= stall_iters)
+            stalled = st.stalled | hit
+            active = active & ~hit
+            new = dataclasses.replace(
+                st, x=x, r=r, z=z, d=d, nom=nom, iters=iters,
+                active=active, best=best, stall=stall, stalled=stalled,
+            )
+        else:
+            new = dataclasses.replace(
+                st, x=x, r=r, z=z, d=d, nom=nom, iters=iters, active=active
+            )
         return (new, step + 1)
 
     state, _ = jax.lax.while_loop(
@@ -265,6 +305,53 @@ def merge_states(reset_mask, fresh: BpcgState, old: BpcgState) -> BpcgState:
     )
 
 
+def true_residual_audit(
+    A: Callable, M: Callable, b, state: BpcgState, slack: float = 4.0
+) -> BpcgState:
+    """The reduced-precision honesty check: CG's recursively updated
+    residual drifts from ``b - A x`` once rounding dominates, so its
+    ``nom`` can sail below any threshold while the *true* residual sits
+    at the arithmetic's floor.  Recompute the true preconditioned norm
+    for rows claiming convergence; a row whose true ``nom`` exceeds its
+    threshold by more than ``slack`` is marked ``stalled`` (sticky) and
+    gets the true norm as its exit ``nom``, so ``bpcg_result`` reports
+    it unconverged and the solve/serving layers route it to the f64
+    fallback.  Rows passing the audit keep their state bitwise.  Never
+    run on the f64 path (drift there is below any meaningful
+    tolerance — and the extra A/M application isn't free)."""
+    claimed = ~state.active & (state.nom <= state.threshold) & ~state.stalled
+    rt = b - A(state.x)
+    nomt = _dots(M(rt), rt)
+    lying = claimed & (nomt > state.threshold * slack)
+    return dataclasses.replace(
+        state,
+        nom=jnp.where(lying, nomt, state.nom),
+        stalled=state.stalled | lying,
+    )
+
+
+def _merge_fallback_rows(res: BPCGResult, sub: BPCGResult, rows) -> BPCGResult:
+    """Merge an f64 re-solve of ``rows`` into a reduced-precision
+    result.  The merged result is f64 (a fallback row's extra accuracy
+    cannot ride an f32 vector); ``iterations`` accumulates so the
+    reported count is the honest total cost, and ``fallback`` marks the
+    re-solved rows while ``stalled`` keeps recording that the reduced
+    pass flagged them."""
+    rows = jnp.asarray(np.asarray(rows, dtype=np.int32))
+    f64 = lambda a: jnp.asarray(a, jnp.float64)
+    return BPCGResult(
+        x=f64(res.x).at[rows].set(f64(sub.x)),
+        iterations=res.iterations.at[rows].add(sub.iterations),
+        converged=res.converged.at[rows].set(sub.converged),
+        final_norm=f64(res.final_norm).at[rows].set(f64(sub.final_norm)),
+        initial_norm=f64(res.initial_norm).at[rows].set(
+            f64(sub.initial_norm)
+        ),
+        stalled=res.stalled,
+        fallback=jnp.zeros_like(res.stalled).at[rows].set(True),
+    )
+
+
 def bpcg_result(state: BpcgState) -> BPCGResult:
     return BPCGResult(
         x=state.x,
@@ -272,6 +359,8 @@ def bpcg_result(state: BpcgState) -> BPCGResult:
         converged=state.nom <= state.threshold,
         final_norm=jnp.sqrt(jnp.abs(state.nom)),
         initial_norm=jnp.sqrt(jnp.abs(state.nom0)),
+        stalled=jnp.asarray(state.stalled),
+        fallback=jnp.zeros_like(jnp.asarray(state.stalled)),
     )
 
 
@@ -284,6 +373,8 @@ def bpcg(
     rel_tol=1e-6,
     abs_tol=0.0,
     maxiter: int = 5000,
+    stall_iters: int = 0,
+    stall_rtol: float = 0.99,
 ) -> BPCGResult:
     """MFEM-style PCG over a leading scenario axis with masked
     convergence.
@@ -294,9 +385,13 @@ def bpcg(
     updating while the rest keep iterating; the loop exits when no
     scenario is active.  Implemented as the resumable step program run
     in one uninterrupted chunk (see :func:`bpcg_init` /
-    :func:`bpcg_chunk`)."""
+    :func:`bpcg_chunk`; ``stall_iters`` enables the per-row stagnation
+    detector for reduced-precision runs)."""
     state = bpcg_init(A, b, M, x0=x0, rel_tol=rel_tol, abs_tol=abs_tol)
-    state = bpcg_chunk(A, state, M, k_iters=None, maxiter=maxiter)
+    state = bpcg_chunk(
+        A, state, M, k_iters=None, maxiter=maxiter,
+        stall_iters=stall_iters, stall_rtol=stall_rtol,
+    )
     return bpcg_result(state)
 
 
@@ -313,6 +408,24 @@ class BatchedGMGSolver:
     resumable step program for continuous batching.  Each jitted entry
     point is traced once per batch size (bucket) and reused for every
     subsequent call of the same shape.
+
+    Precision: ``precision`` names a
+    :class:`~repro.core.precision.PrecisionPolicy` (``"f64"``,
+    ``"f32"``, ``"mixed"``, ``"mixed-bf16"`` or a policy object).  The
+    outer Krylov loop — ``BpcgState`` vectors, operator apply in the CG
+    recurrence, residual norms, thresholds — runs in
+    ``policy.solve_dtype`` (exposed as ``self.dtype``); the GMG V-cycle
+    (weighted material fields, Chebyshev smoother, transfers) runs in
+    ``policy.precond_dtype``; the coarse probe/Cholesky in
+    ``policy.coarse_dtype``.  For genuinely mixed policies the fine
+    level keeps a second, ``solve_dtype`` copy of its weighted fields
+    (``prep["lam_w_solve"]``/``prep["mu_w_solve"]``) so the outer
+    residual is computed at full precision while the smoother streams
+    reduced bytes.  Reduced policies run with the stagnation detector
+    on, and ``solve`` re-solves any stalled rows on a lazily built f64
+    twin solver (``fallback`` marks them in the result).  The legacy
+    ``dtype`` argument still works and resolves to the matching uniform
+    policy.
     """
 
     def __init__(
@@ -322,12 +435,15 @@ class BatchedGMGSolver:
         p_target: int,
         *,
         assembly: str = "paop",
-        dtype=jnp.float64,
+        dtype=None,
+        precision: str | PrecisionPolicy | None = None,
         cheb_degree: int = 2,
         power_iters: int = 10,
         ess_faces=("x0",),
         traction_face: str = "x1",
         maxiter: int = 200,
+        stall_iters: int = 20,
+        stall_rtol: float = 0.99,
         pallas_interpret: bool | None = None,
         pallas_lane: str | None = None,
         mesh=None,
@@ -338,10 +454,21 @@ class BatchedGMGSolver:
         self.n_h_refine = n_h_refine
         self.p_target = p_target
         self.assembly = assembly
-        self.dtype = dtype
+        self.precision = resolve_precision(precision, dtype)
+        self.dtype = self.precision.solve_dtype
+        self.precond_dtype = self.precision.precond_dtype
+        self.coarse_dtype = self.precision.coarse_dtype
         self.cheb_degree = cheb_degree
         self.power_iters = power_iters
         self.maxiter = maxiter
+        # Stagnation detection is armed only for reduced policies: the
+        # f64 program stays bit-identical (stall_iters=0 compiles the
+        # detector out of the loop body entirely).
+        self.stall_iters = stall_iters if self.precision.reduced else 0
+        self.stall_rtol = stall_rtol
+        self._f64_twin: BatchedGMGSolver | None = None
+        self._ess_faces = ess_faces
+        self._traction_face = traction_face
         # Pallas lane, resolved ONCE here so every level operator runs
         # the same lane and ``self.pallas_lane`` reports what actually
         # runs ("compiled" or "interpret"; auto falls back to interpret
@@ -367,17 +494,24 @@ class BatchedGMGSolver:
         # average (see _restrict_field); p-embedding levels share the
         # fine mesh, so their map is the identity (stored as None).
         fine_mesh = spaces[-1].mesh
+        # True when the outer Krylov and the V-cycle run different
+        # dtypes — the fine level then carries a solve-dtype twin of its
+        # base operator (outer A) next to the precond-dtype one.
+        self._split_fine = jnp.dtype(self.dtype) != jnp.dtype(
+            self.precond_dtype
+        )
         self._base_ops = []
         self._desc_idx: list[Any] = []
         for i, sp in enumerate(spaces):
             lvl_assembly = assembly if i > 0 else "paop"
             # Base operators are geometry/tables carriers only: every
-            # solve binds per-scenario fields via with_materials*.
+            # solve binds per-scenario fields via with_materials*.  The
+            # V-cycle levels live at the policy's precond dtype.
             op = ElasticityOperator(
                 sp,
                 assembly=lvl_assembly,
                 materials=DEFER_MATERIALS,
-                dtype=dtype,
+                dtype=self.precond_dtype,
                 ess_faces=ess_faces,
                 pallas_lane=self.pallas_lane,
                 shard_mesh=self.mesh,
@@ -388,10 +522,24 @@ class BatchedGMGSolver:
                 if sp.nelem == fine_mesh.nelem
                 else jnp.asarray(fine_descendants(sp.mesh, fine_mesh))
             )
+        self._fine_base_solve = (
+            ElasticityOperator(
+                spaces[-1],
+                assembly=assembly if len(spaces) > 1 else "paop",
+                materials=DEFER_MATERIALS,
+                dtype=self.dtype,
+                ess_faces=ess_faces,
+                pallas_lane=self.pallas_lane,
+                shard_mesh=self.mesh,
+            )
+            if self._split_fine
+            else None
+        )
 
         self.transfers = [
             make_transfer(
-                spaces[i], spaces[i + 1], dtype=dtype, shard_mesh=self.mesh
+                spaces[i], spaces[i + 1], dtype=self.precond_dtype,
+                shard_mesh=self.mesh,
             )
             for i in range(len(spaces) - 1)
         ]
@@ -400,7 +548,7 @@ class BatchedGMGSolver:
         fine = spaces[-1]
         self._traction_pattern = jnp.asarray(
             fine.traction_rhs(traction_face, (1.0, 0.0, 0.0))[:, 0],
-            dtype=dtype,
+            dtype=self.dtype,
         )
         self._fine_ess = jnp.asarray(self._base_ops[-1].ess_mask)
         self._jit_solve = jax.jit(self._solve_impl)
@@ -433,16 +581,18 @@ class BatchedGMGSolver:
         s = len(materials)
         if n is None:
             n = self.pad_batch(s)
-        tractions = np.asarray(tractions, dtype=np.float64)
-        rel = np.broadcast_to(
-            np.asarray(rel_tol, dtype=np.float64), (s,)
-        ).copy()
+        # Solver dtype, NOT a hard-coded float64: a non-f64 solver must
+        # not have its runtime arguments silently promoted (the whole
+        # solve would re-trace and run at the wrong precision).
+        sdt = np.dtype(self.dtype)
+        tractions = np.asarray(tractions, dtype=sdt)
+        rel = np.broadcast_to(np.asarray(rel_tol, dtype=sdt), (s,)).copy()
         if n > s:
             materials = list(materials) + [materials[0]] * (n - s)
             tractions = np.concatenate(
-                [tractions, np.zeros((n - s, 3))], axis=0
+                [tractions, np.zeros((n - s, 3), dtype=sdt)], axis=0
             )
-            rel = np.concatenate([rel, np.full((n - s,), 1e-6)])
+            rel = np.concatenate([rel, np.full((n - s,), 1e-6, dtype=sdt)])
         return materials, tractions, rel, s
 
     def _check_batch(self, s: int, what: str) -> None:
@@ -475,26 +625,30 @@ class BatchedGMGSolver:
         ``prep`` argument of a ``prepare`` call whose reset mask covers
         every row that will ever be read."""
         self._check_batch(s, "empty_prep")
+        pdt = np.dtype(self.precond_dtype)
         lam_w, mu_w, dinv, lmax = [], [], [], []
         for i, (base, sp) in enumerate(zip(self._base_ops, self.spaces)):
             shape = (s * sp.nelem,) + base.w_detj.shape
-            lam_w.append(np.zeros(shape, dtype=np.dtype(self.dtype)))
-            mu_w.append(np.zeros(shape, dtype=np.dtype(self.dtype)))
+            lam_w.append(np.zeros(shape, dtype=pdt))
+            mu_w.append(np.zeros(shape, dtype=pdt))
             if i > 0:
-                dinv.append(
-                    np.zeros((s, sp.nscalar, 3), dtype=np.dtype(self.dtype))
-                )
-                lmax.append(np.zeros((s,), dtype=np.dtype(self.dtype)))
+                dinv.append(np.zeros((s, sp.nscalar, 3), dtype=pdt))
+                lmax.append(np.zeros((s,), dtype=pdt))
         n0 = self.spaces[0].nscalar * 3
-        return self._put(
-            {
-                "lam_w": tuple(lam_w),
-                "mu_w": tuple(mu_w),
-                "dinv": tuple(dinv),
-                "lmax": tuple(lmax),
-                "chol": np.zeros((s, n0, n0), dtype=np.dtype(self.dtype)),
-            }
-        )
+        prep = {
+            "lam_w": tuple(lam_w),
+            "mu_w": tuple(mu_w),
+            "dinv": tuple(dinv),
+            "lmax": tuple(lmax),
+            "chol": np.zeros((s, n0, n0), dtype=np.dtype(self.coarse_dtype)),
+        }
+        if self._split_fine:
+            fine = self.spaces[-1]
+            shape = (s * fine.nelem,) + self._fine_base_solve.w_detj.shape
+            sdt = np.dtype(self.dtype)
+            prep["lam_w_solve"] = np.zeros(shape, dtype=sdt)
+            prep["mu_w_solve"] = np.zeros(shape, dtype=sdt)
+        return self._put(prep)
 
     def empty_state(self, s: int) -> BpcgState:
         """All-rows-retired state of the right shapes for an S-row batch
@@ -514,6 +668,9 @@ class BatchedGMGSolver:
                 threshold=row,
                 iters=np.zeros((s,), dtype=np.int32),
                 active=np.zeros((s,), dtype=bool),
+                best=row,
+                stall=np.zeros((s,), dtype=np.int32),
+                stalled=np.zeros((s,), dtype=bool),
             )
         )
 
@@ -551,6 +708,10 @@ class BatchedGMGSolver:
             "lmax": tuple(jnp.asarray(l)[rows] for l in prep["lmax"]),
             "chol": jnp.asarray(prep["chol"])[rows],
         }
+        if self._split_fine:
+            ne = self.fine_space.nelem
+            new_prep["lam_w_solve"] = fold_take(prep["lam_w_solve"], ne)
+            new_prep["mu_w_solve"] = fold_take(prep["mu_w_solve"], ne)
         return self._put(new_state), self._put(new_prep)
 
     def copy_prep_rows(self, prep: dict, src, dst) -> dict:
@@ -573,21 +734,24 @@ class BatchedGMGSolver:
             a = jnp.asarray(a)
             return a.at[dst].set(a[src])
 
-        return self._put(
-            {
-                "lam_w": tuple(
-                    fold_copy(w, sp.nelem)
-                    for w, sp in zip(prep["lam_w"], self.spaces)
-                ),
-                "mu_w": tuple(
-                    fold_copy(w, sp.nelem)
-                    for w, sp in zip(prep["mu_w"], self.spaces)
-                ),
-                "dinv": tuple(row_copy(d) for d in prep["dinv"]),
-                "lmax": tuple(row_copy(l) for l in prep["lmax"]),
-                "chol": row_copy(prep["chol"]),
-            }
-        )
+        new_prep = {
+            "lam_w": tuple(
+                fold_copy(w, sp.nelem)
+                for w, sp in zip(prep["lam_w"], self.spaces)
+            ),
+            "mu_w": tuple(
+                fold_copy(w, sp.nelem)
+                for w, sp in zip(prep["mu_w"], self.spaces)
+            ),
+            "dinv": tuple(row_copy(d) for d in prep["dinv"]),
+            "lmax": tuple(row_copy(l) for l in prep["lmax"]),
+            "chol": row_copy(prep["chol"]),
+        }
+        if self._split_fine:
+            ne = self.fine_space.nelem
+            new_prep["lam_w_solve"] = fold_copy(prep["lam_w_solve"], ne)
+            new_prep["mu_w_solve"] = fold_copy(prep["mu_w_solve"], ne)
+        return self._put(new_prep)
 
     # -- traced bodies -------------------------------------------------------
     def _restrict_field(self, field, level: int):
@@ -634,10 +798,15 @@ class BatchedGMGSolver:
             mu_w.append(self._pin(op.mu_w))
             cop = op.constrained()
             if i == 0:
+                # Probe at the V-cycle dtype (the operator's own), then
+                # factor at the coarse dtype — mixed-bf16 probes through
+                # a bf16 operator but holds the Cholesky at f32, where
+                # the factorization is still numerically viable.
                 K = probe_coarse_matrix(
-                    cop, sp.nscalar, s, self.dtype, shard_mesh=self.mesh
+                    cop, sp.nscalar, s, self.precond_dtype,
+                    shard_mesh=self.mesh,
                 )
-                L = jnp.linalg.cholesky(K)
+                L = jnp.linalg.cholesky(K.astype(self.coarse_dtype))
                 chol = self._pin(
                     jnp.where(reset_mask[:, None, None], L, prep["chol"])
                 )
@@ -646,7 +815,7 @@ class BatchedGMGSolver:
                     cop,
                     cop.diagonal(),
                     shape=(s, sp.nscalar, 3),
-                    dtype=self.dtype,
+                    dtype=self.precond_dtype,
                     degree=self.cheb_degree,
                     power_iters=self.power_iters,
                     batch_dims=1,
@@ -666,18 +835,38 @@ class BatchedGMGSolver:
                         jnp.where(reset_mask, sm.lmax, prep["lmax"][i - 1])
                     )
                 )
-        return {
+        out = {
             "lam_w": tuple(lam_w),
             "mu_w": tuple(mu_w),
             "dinv": tuple(dinv),
             "lmax": tuple(lmax),
             "chol": chol,
         }
+        if self._split_fine:
+            # Solve-dtype twin of the fine-level weighted fields: the
+            # outer Krylov's operator apply must run at full precision
+            # even while the smoother streams the reduced copy.
+            prev = self._fine_base_solve.with_material_weights(
+                prep["lam_w_solve"], prep["mu_w_solve"], s
+            )
+            op = prev.with_materials_rows(
+                lam_vals, mu_vals, reset_mask
+            )
+            out["lam_w_solve"] = self._pin(op.lam_w)
+            out["mu_w_solve"] = self._pin(op.mu_w)
+        return out
 
     def _build_from_prep(self, prep):
         """Hierarchy + preconditioner from a prep pytree: binds the
         stored weighted fields and smoother data — no power iterations,
-        no probing, no factorization."""
+        no probing, no factorization.
+
+        Returns ``(levels, gmg, A, M)``: ``A`` is the outer Krylov
+        operator at ``solve_dtype`` (the fine level's solve-dtype twin
+        under a genuinely mixed policy, the fine V-cycle level
+        otherwise) and ``M`` the preconditioner with the solve<->precond
+        cast boundary folded in (identity casts under uniform
+        policies)."""
         s = prep["chol"].shape[0]
         levels = []
         for i, base in enumerate(self._base_ops):
@@ -703,12 +892,26 @@ class BatchedGMGSolver:
                     ess_mask=op.ess_mask,
                 )
             )
+        coarse = cholesky_solver(prep["chol"], shard_mesh=self.mesh)
+        if jnp.dtype(self.coarse_dtype) != jnp.dtype(self.precond_dtype):
+            inner, cdt, pdt = coarse, self.coarse_dtype, self.precond_dtype
+            coarse = lambda r: inner(r.astype(cdt)).astype(pdt)
         gmg = GMGPreconditioner(
             levels=levels,
             transfers=self.transfers,
-            coarse_solve=cholesky_solver(prep["chol"], shard_mesh=self.mesh),
+            coarse_solve=coarse,
         )
-        return levels, gmg
+        if self._split_fine:
+            fine_solve = self._fine_base_solve.with_material_weights(
+                prep["lam_w_solve"], prep["mu_w_solve"], s
+            )
+            A = fine_solve.constrained()
+            sdt, pdt = self.dtype, self.precond_dtype
+            M = lambda r: gmg(r.astype(pdt)).astype(sdt)
+        else:
+            A = levels[-1].constrained
+            M = gmg
+        return levels, gmg, A, M
 
     def _rhs(self, tractions):
         b = self._traction_pattern[None, :, None] * tractions[:, None, :]
@@ -724,15 +927,17 @@ class BatchedGMGSolver:
         *, do_reset: bool,
     ) -> tuple[BpcgState, Any]:
         state, prep = self._pin(state), self._pin(prep)
-        levels, gmg = self._build_from_prep(prep)
-        A = levels[-1].constrained
+        levels, gmg, A, M = self._build_from_prep(prep)
         if do_reset:
-            fresh = bpcg_init(A, self._rhs(tractions), M=gmg, rel_tol=rel_tol)
+            fresh = bpcg_init(A, self._rhs(tractions), M=M, rel_tol=rel_tol)
             state = merge_states(reset_mask, fresh, state)
         start_iters = state.iters
         out = bpcg_chunk(
-            A, state, M=gmg, k_iters=k_iters, maxiter=self.maxiter
+            A, state, M=M, k_iters=k_iters, maxiter=self.maxiter,
+            stall_iters=self.stall_iters, stall_rtol=self.stall_rtol,
         )
+        if self.stall_iters > 0:
+            out = true_residual_audit(A, M, self._rhs(tractions), out)
         # Per-row iterations consumed by THIS chunk: the scheduling
         # policies read retire cadence from this (S,) vector, so the
         # host never has to fetch the full state mid-flight.
@@ -743,10 +948,14 @@ class BatchedGMGSolver:
         prep = self._prepare_body(
             lam_vals, mu_vals, jnp.ones((s,), dtype=bool), self.empty_prep(s)
         )
-        levels, gmg = self._build_from_prep(prep)
-        A = levels[-1].constrained
-        state = bpcg_init(A, self._rhs(tractions), M=gmg, rel_tol=rel_tol)
-        state = bpcg_chunk(A, state, M=gmg, k_iters=None, maxiter=self.maxiter)
+        levels, gmg, A, M = self._build_from_prep(prep)
+        state = bpcg_init(A, self._rhs(tractions), M=M, rel_tol=rel_tol)
+        state = bpcg_chunk(
+            A, state, M=M, k_iters=None, maxiter=self.maxiter,
+            stall_iters=self.stall_iters, stall_rtol=self.stall_rtol,
+        )
+        if self.stall_iters > 0:
+            state = true_residual_audit(A, M, self._rhs(tractions), state)
         return bpcg_result(self._pin(state))
 
     # -- public entry --------------------------------------------------------
@@ -855,6 +1064,27 @@ class BatchedGMGSolver:
             jnp.asarray(k_iters, dtype=jnp.int32), do_reset=do_reset,
         )
 
+    def _f64_fallback_solver(self) -> "BatchedGMGSolver":
+        """The lazily built f64 twin that re-solves stalled rows: same
+        discretization/geometry, the ``f64`` policy (which never
+        recurses — its own detector is disarmed)."""
+        if self._f64_twin is None:
+            self._f64_twin = BatchedGMGSolver(
+                self.coarse_mesh,
+                self.n_h_refine,
+                self.p_target,
+                assembly=self.assembly,
+                precision="f64",
+                cheb_degree=self.cheb_degree,
+                power_iters=self.power_iters,
+                ess_faces=self._ess_faces,
+                traction_face=self._traction_face,
+                maxiter=self.maxiter,
+                pallas_lane=self.pallas_lane,
+                mesh=self.mesh,
+            )
+        return self._f64_twin
+
     def solve(
         self,
         materials: list[dict],
@@ -873,17 +1103,25 @@ class BatchedGMGSolver:
         Sharded solvers pad S up to a multiple of the device count with
         born-converged rows (see :meth:`pad_scenarios`) and slice them
         off the result: callers see exactly the S rows they asked for.
-        """
+
+        Reduced-precision policies carry the f64 safety net: rows the
+        stagnation detector flagged (their requested tolerance sits
+        below the reduced arithmetic's residual floor) are re-solved on
+        the lazily built f64 twin and merged back — ``fallback`` marks
+        them, ``iterations`` counts the total work (reduced + f64
+        passes), and the merged result is promoted to f64 (only
+        observable for the uniform ``f32`` policy; mixed policies
+        already solve in f64)."""
         materials, tractions, rel_tol, s = self.pad_scenarios(
             materials, tractions, rel_tol
         )
         lam_vals, mu_vals = self.pack_materials(materials)
-        tractions = jnp.asarray(tractions, self.dtype)
+        tr = jnp.asarray(tractions, self.dtype)
         rel = jnp.asarray(rel_tol, self.dtype)
-        lam_vals, mu_vals, tractions, rel = self._put(
-            (lam_vals, mu_vals, tractions, rel)
+        lam_vals, mu_vals, tr, rel = self._put(
+            (lam_vals, mu_vals, tr, rel)
         )
-        res = self._jit_solve(lam_vals, mu_vals, tractions, rel)
+        res = self._jit_solve(lam_vals, mu_vals, tr, rel)
         if len(materials) > s:
             res = BPCGResult(
                 **{
@@ -891,4 +1129,15 @@ class BatchedGMGSolver:
                     for fld in dataclasses.fields(BPCGResult)
                 }
             )
+        if self.precision.reduced:
+            need = np.asarray(res.stalled) & ~np.asarray(res.converged)
+            if need.any():
+                rows = np.nonzero(need)[0]
+                twin = self._f64_fallback_solver()
+                sub = twin.solve(
+                    [materials[int(i)] for i in rows],
+                    np.asarray(tractions, dtype=np.float64)[rows],
+                    np.asarray(rel_tol, dtype=np.float64)[rows],
+                )
+                res = _merge_fallback_rows(res, sub, rows)
         return res

@@ -90,7 +90,12 @@ class ChebyshevSmoother:
     @classmethod
     def setup(cls, A, diagonal, shape, dtype, degree=2, power_iters=10,
               batch_dims=0, shard_mesh=None):
-        dinv = 1.0 / diagonal
+        # Essential-BC rows carry an identity diagonal by construction
+        # (ConstrainedOperator.diagonal), but a zero slipping through —
+        # e.g. a degenerate padded row — must not poison dinv with inf.
+        diagonal = jnp.asarray(diagonal)
+        safe = jnp.where(diagonal == 0, jnp.ones_like(diagonal), diagonal)
+        dinv = 1.0 / safe
         lmax = power_iteration_lmax(
             A, dinv, shape, dtype, power_iters, batch_dims=batch_dims,
             shard_mesh=shard_mesh,
@@ -99,7 +104,11 @@ class ChebyshevSmoother:
 
     def __call__(self, b, x=None):
         """Apply ``degree`` Chebyshev-Jacobi steps to A x = b."""
-        hi = self.eig_hi_frac * jnp.asarray(self.lmax)
+        # Coefficients live in the vector-block dtype, not lmax's: an
+        # f32 lmax estimated at setup against f64 blocks (or the mixed
+        # policy's f64 lmax against f32 blocks) must neither demote the
+        # recurrence nor silently promote every d/z update.
+        hi = self.eig_hi_frac * jnp.asarray(self.lmax, dtype=b.dtype)
         lo = self.eig_lo_frac * hi
         theta = 0.5 * (hi + lo)
         delta = 0.5 * (hi - lo)

@@ -53,7 +53,7 @@ def test_docs_exist_and_have_snippets():
     names = {p.name for p in DOC_FILES}
     assert {
         "README.md", "ARCHITECTURE.md", "KERNELS.md", "MATERIALS.md",
-        "SCHEDULING.md", "OBSERVABILITY.md",
+        "SCHEDULING.md", "OBSERVABILITY.md", "PRECISION.md",
     } <= names
     by_file = {}
     for param in SNIPPETS:
@@ -65,6 +65,7 @@ def test_docs_exist_and_have_snippets():
     assert by_file.get("docs/MATERIALS.md", 0) >= 4
     assert by_file.get("docs/SCHEDULING.md", 0) >= 5
     assert by_file.get("docs/OBSERVABILITY.md", 0) >= 4
+    assert by_file.get("docs/PRECISION.md", 0) >= 5
 
 
 @pytest.mark.docs

@@ -367,7 +367,7 @@ def _mixed_requests(n, p=1, refine=1):
 LEGACY_KEYS = {
     "cache_hits", "cache_misses", "generations", "chunks",
     "chunk_iters_dispatched", "wasted_iters", "refills", "rebuckets",
-    "prep_calls", "prep_row_copies",
+    "prep_calls", "prep_row_copies", "precision_fallbacks",
 }
 
 
@@ -395,7 +395,8 @@ class TestServiceIntegration:
         svc = ElasticityService(max_batch=2, chunk_iters=6)
         svc.solve_continuous(_mixed_requests(2))
         v = svc.registry.value(
-            "service_chunks_total", p=1, refine=1, policy="fixed", devices=1
+            "service_chunks_total", p=1, refine=1, policy="fixed", devices=1,
+            precision="f64",
         )
         assert v == svc.stats["chunks"] > 0
 
@@ -498,7 +499,8 @@ class TestServiceIntegration:
         svc = ElasticityService(max_batch=2, chunk_iters=6)
         svc.solve_continuous(_mixed_requests(2))
         assert svc.registry.get_histogram(
-            "chunk_device_seconds", p=1, refine=1, policy="fixed", devices=1
+            "chunk_device_seconds", p=1, refine=1, policy="fixed", devices=1,
+            precision="f64",
         ) is None
 
     def test_shared_registry_across_services(self):
@@ -542,7 +544,7 @@ class TestServiceIntegration:
             ), k
         assert svc.registry.value(
             "service_chunks_total",
-            p=1, refine=1, policy="fixed", devices=8,
+            p=1, refine=1, policy="fixed", devices=8, precision="f64",
         ) == svc.stats["chunks"]
         assert rec.open_count == 0
         assert rec.count("chunk_dispatch") == svc.stats["chunks"]
