@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import zlib
 from typing import Any
@@ -37,6 +38,12 @@ import numpy as np
 __all__ = ["CheckpointManager"]
 
 _MANIFEST = "manifest.json"
+
+# keystr of a single-level {"name": leaf} dict: ['name'].  Flat-dict
+# checkpoints (the serving-state layout repro.serve.recovery writes) are
+# restored by NAME via restore_items, so the reader does not need a
+# ``like`` tree whose structure it cannot know before reading.
+_FLAT_KEY = re.compile(r"\['([^']*)'\]")
 
 
 def _flatten_with_paths(tree):
@@ -132,6 +139,47 @@ class CheckpointManager:
             tgt_dtype = np.asarray(leaf).dtype if hasattr(leaf, "dtype") else arr.dtype
             out.append(arr.astype(tgt_dtype, copy=False))
         return jax.tree.unflatten(treedef, out), manifest["extra"]
+
+    def restore_items(
+        self, step: int | None = None
+    ) -> tuple[dict[str, np.ndarray], dict]:
+        """CRC-verified restore of a flat single-level dict checkpoint
+        WITHOUT a ``like`` tree: returns ``({name: array}, extra)``.
+
+        This is the reader for serving-state checkpoints
+        (:mod:`repro.serve.recovery`), whose structure — how many
+        flights, which prep leaves — is itself part of the checkpoint,
+        so the caller cannot supply a structural template up front.
+        Leaf names come from the manifest paths (``['name']`` for a flat
+        dict); non-flat paths are returned under their full keystr."""
+        if step is None:
+            step = self.latest()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        cdir = os.path.join(self.directory, f"step_{step:09d}")
+        with open(os.path.join(cdir, _MANIFEST)) as f:
+            manifest = json.load(f)
+        items: dict[str, np.ndarray] = {}
+        for e in manifest["leaves"]:
+            arr = np.load(os.path.join(cdir, e["file"]))
+            if zlib.crc32(arr.tobytes()) != e["crc32"]:
+                raise IOError(f"crc mismatch for {e['path']} in {cdir}")
+            m = _FLAT_KEY.fullmatch(e["path"])
+            items[m.group(1) if m else e["path"]] = arr
+        return items, manifest["extra"]
+
+    def restore_latest_items(
+        self,
+    ) -> tuple[dict[str, np.ndarray], dict, int] | None:
+        """Walk checkpoints newest-first until one verifies (same
+        fallback contract as :meth:`restore_latest`, flat-dict reader)."""
+        for step in reversed(self.available_steps()):
+            try:
+                items, extra = self.restore_items(step)
+                return items, extra, step
+            except (IOError, KeyError, ValueError, json.JSONDecodeError):
+                continue
+        return None
 
     def restore_latest(self, like: Any) -> tuple[Any, dict, int] | None:
         """Walk checkpoints newest-first until one verifies; None if none."""

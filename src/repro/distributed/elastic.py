@@ -1,23 +1,32 @@
-"""Elastic scaling + failure handling for the training loop.
+"""Elastic scaling + failure handling for the serving and training loops.
 
 The recovery model is checkpoint-based (the standard for TPU pods, where
 a failed host takes down its slice): on any fault the job restarts from
 the last complete checkpoint, possibly on a *different* device count.
+For the continuous solve service that restart path is
+:class:`repro.serve.recovery.ServiceRecovery` — in-flight
+:class:`~repro.solvers.batched.BpcgState` checkpoints restore onto
+whatever scenario mesh the survivor process builds here.
 
-* :func:`elastic_remesh` — build the largest valid (data, model) mesh
-  for whatever devices are alive, preserving the model-axis size when
-  possible (TP degree is architecture-bound; DP degree is the elastic
-  dimension).  Because the data pipeline is stateless-deterministic and
-  keyed by *global row id* (repro.data.pipeline), changing the DP degree
-  re-partitions the same global batch — training is bit-reproducible
-  across rescales at fixed global batch size.
-* :func:`reshard_state` — move a restored TrainState onto a new mesh by
-  re-applying the sharding rules (jax.device_put with the new
+* :func:`elastic_scenario_mesh` — the serving-side remesh: a 1-D
+  scenario mesh over whatever devices are alive (the scenario axis has
+  no architecture-bound degree, so any device count is a valid mesh;
+  restored states are re-laid-out row-wise via
+  ``BatchedGMGSolver.take_rows`` / ``device_put_scenario``).
+* :func:`elastic_remesh` — the training-side variant: largest valid
+  (data, model) mesh, preserving the model-axis size when possible (TP
+  degree is architecture-bound; DP degree is the elastic dimension).
+* :func:`reshard_state` — move a restored state pytree onto a new mesh
+  by re-applying sharding rules (jax.device_put with the new
   NamedSharding tree).
+* :func:`simulate_failures` — deterministic device-loss test hook, used
+  by the fault-injection suite to rehearse shrink/regrow rescales.
 * :class:`StepWatchdog` — straggler/hang mitigation: a monitor thread
-  that fires a callback when a step exceeds ``timeout`` (at pod scale
-  the callback escalates to the cluster manager to evict the straggler;
-  here it records and optionally raises).
+  that fires a callback when a step exceeds ``timeout``.  The solve
+  service wires it onto ``step()`` via
+  ``ElasticityService.attach_watchdog`` (fires feed the metrics
+  registry and span stream); at pod scale the callback escalates to the
+  cluster manager to evict the straggler.
 """
 
 from __future__ import annotations
@@ -29,7 +38,25 @@ from typing import Callable
 import jax
 from jax.sharding import Mesh, NamedSharding
 
-__all__ = ["elastic_remesh", "reshard_state", "StepWatchdog", "simulate_failures"]
+__all__ = [
+    "elastic_scenario_mesh",
+    "elastic_remesh",
+    "reshard_state",
+    "StepWatchdog",
+    "simulate_failures",
+]
+
+
+def elastic_scenario_mesh(devices=None) -> Mesh:
+    """1-D scenario mesh over the alive devices (all of them by
+    default) — the serving-side ``elastic_remesh``.  Unlike the
+    (data, model) training mesh there is no architecture-bound axis to
+    preserve: scenarios never couple, so every device count is a valid
+    mesh and a rescale is purely a row re-layout (see
+    :meth:`repro.solvers.batched.BatchedGMGSolver.take_rows`)."""
+    from repro.distributed.sharding import scenario_mesh
+
+    return scenario_mesh(devices=devices)
 
 
 def elastic_remesh(

@@ -79,6 +79,7 @@ __all__ = [
     "pin_scenario",
     "device_put_scenario",
     "scenario_row_devices",
+    "scenario_layout_mismatches",
     "force_host_device_count",
 ]
 
@@ -201,6 +202,31 @@ def scenario_row_devices(s: int, n_shards: int) -> np.ndarray:
             f"scenario_row_devices: {s} rows do not divide {n_shards} shards"
         )
     return np.arange(s) // max(s // n_shards, 1)
+
+
+def scenario_layout_mismatches(tree: Any, mesh: Mesh | None) -> list[str]:
+    """Tree paths of array leaves NOT carrying axis-0 scenario
+    ``NamedSharding`` on ``mesh`` (empty list == correctly laid out).
+
+    The elastic-restore differential asserts on this: after a
+    checkpoint restored onto a different device count, every leaf of
+    the re-pinned state/prep pytrees must live on the NEW mesh with the
+    scenario axis sharded — a silently replicated (or stale-mesh) leaf
+    would still compute correctly but defeat the rescale.  With ``mesh``
+    None (single-device) any placement is accepted."""
+    if mesh is None:
+        return []
+    bad = []
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        nd = jnp_ndim(leaf)
+        if nd == 0:
+            continue
+        sh = getattr(leaf, "sharding", None)
+        want = scenario_sharding(mesh, nd)
+        if sh is None or not sh.is_equivalent_to(want, nd):
+            path = jax.tree_util.keystr(kp)
+            bad.append(f"{path}: {sh}")
+    return bad
 
 
 def jnp_ndim(x) -> int:

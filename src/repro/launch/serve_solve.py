@@ -19,6 +19,10 @@ Usage:
         --material-field lognormal:7   # heterogeneous per-element fields
     PYTHONPATH=src python -m repro.launch.serve_solve --continuous \
         --metrics-out metrics.prom --trace-out trace.json  # observability
+    PYTHONPATH=src python -m repro.launch.serve_solve --continuous \
+        --checkpoint-dir ckpt --checkpoint-every 2   # fault tolerance
+    PYTHONPATH=src python -m repro.launch.serve_solve --continuous \
+        --checkpoint-dir ckpt --resume               # restart after a kill
 
 ``--material-field {graded,checkerboard,lognormal[:seed]}`` replaces the
 attribute-dict materials with per-element ``(lam_e, mu_e)`` coefficient
@@ -46,11 +50,28 @@ device-fencing span recorder and writes a Chrome ``trace_event`` file
 viewable at https://ui.perfetto.dev; ``--events-out`` writes the same
 spans as JSON-lines.  A latency-quantile summary line (p50/p90/p99 from
 the registry histogram) prints either way; see docs/OBSERVABILITY.md.
+
+``--checkpoint-dir`` (continuous mode) snapshots the full serving state
+— every in-flight resumable BpcgState, the queue, tickets — every
+``--checkpoint-every`` steps through
+:class:`repro.serve.recovery.ServiceRecovery`; ``--resume`` restores the
+newest intact checkpoint instead of submitting a fresh workload, so a
+SIGKILLed run restarted with the same flags finishes every accepted
+request with bitwise-identical solutions and iteration counts.
+``--devices`` may differ across the restart (elastic rescale).
+``--watchdog-timeout`` arms the step hang detector; ``--report-out``
+writes one JSON line per report (ticket, iterations, solution hash) for
+differential comparison; ``--kill-after-steps`` SIGKILLs the process
+mid-run (fault-injection hook for the test harness).  See
+docs/FAULT_TOLERANCE.md.
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import os
+import signal
 import time
 
 import jax
@@ -192,7 +213,36 @@ def main() -> None:
                          "https://ui.perfetto.dev")
     ap.add_argument("--events-out", default=None, metavar="PATH",
                     help="also write the spans as a JSON-lines event log")
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="continuous mode: checkpoint the full serving "
+                         "state (in-flight BpcgState, queue, tickets) "
+                         "into DIR at step boundaries")
+    ap.add_argument("--checkpoint-every", type=int, default=1,
+                    metavar="N", help="steps between checkpoints")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the newest intact checkpoint from "
+                         "--checkpoint-dir instead of submitting a "
+                         "fresh workload (falls back to a fresh "
+                         "workload when DIR has no usable checkpoint)")
+    ap.add_argument("--watchdog-timeout", type=float, default=None,
+                    metavar="SECONDS",
+                    help="arm a step hang detector: steps exceeding "
+                         "this raise the watchdog_fires counter and "
+                         "emit a watchdog_fire span")
+    ap.add_argument("--report-out", default=None, metavar="PATH",
+                    help="write one JSON line per report (ticket, "
+                         "iterations, converged, rel_norm, precision, "
+                         "sha256 of the solution vector) — the "
+                         "crash/restore differential suite compares "
+                         "these files bitwise")
+    ap.add_argument("--kill-after-steps", type=int, default=None,
+                    metavar="N", help="SIGKILL this process after N "
+                         "locally executed continuous steps (after the "
+                         "checkpoint hook) — fault-injection test hook")
     args = ap.parse_args()
+    if args.checkpoint_dir and not args.continuous:
+        ap.error("--checkpoint-dir requires --continuous (the "
+                 "generational path holds no resumable in-flight state)")
 
     # Env must be set before anything touches the jax backend.
     from repro.distributed.sharding import (
@@ -224,16 +274,71 @@ def main() -> None:
     if args.assembly == "paop_pallas":
         print(f"pallas lane: {service.pallas_lane} "
               f"(requested {args.pallas_lane})")
-    for round_i in range(args.repeat):
-        reqs = make_workload(
-            args.n_requests, args.p, args.refine, args.rel_tol,
-            material_field=args.material_field,
+    recovery = None
+    if args.checkpoint_dir:
+        from repro.serve.recovery import ServiceRecovery
+
+        recovery = ServiceRecovery(
+            service, args.checkpoint_dir, every=args.checkpoint_every
         )
+    if args.watchdog_timeout is not None:
+        service.attach_watchdog(args.watchdog_timeout)
+    resumed = False
+    if recovery is not None and args.resume:
+        resumed = recovery.restore()
+        if resumed:
+            print(
+                f"resumed from checkpoint step {service._step_index} "
+                f"({len(service._flights)} flight(s), "
+                f"{len(service._queue)} queued) in {args.checkpoint_dir}"
+            )
+        else:
+            print(f"no usable checkpoint in {args.checkpoint_dir}; "
+                  f"starting fresh")
+    all_reports = []
+    for round_i in range(args.repeat):
         t0 = time.perf_counter()
         if args.continuous:
-            reports = service.solve_continuous(reqs)
+            # Explicit step loop so checkpoints land at every step
+            # boundary and a kill can strike between them.  A resumed
+            # round 0 submits nothing: the checkpoint carries the whole
+            # workload (flights + queue + any undrained reports).
+            if not (resumed and round_i == 0):
+                reqs = make_workload(
+                    args.n_requests, args.p, args.refine, args.rel_tol,
+                    material_field=args.material_field,
+                )
+                if args.report_out:
+                    reqs = [
+                        dataclasses.replace(r, keep_solution=True)
+                        for r in reqs
+                    ]
+                for r in reqs:
+                    service.submit(r)
+            local_steps = 0
+            while not service.idle():
+                service.step()
+                if recovery is not None:
+                    recovery.maybe_checkpoint()
+                local_steps += 1
+                if (
+                    args.kill_after_steps is not None
+                    and local_steps >= args.kill_after_steps
+                ):
+                    print(
+                        f"kill-after-steps: SIGKILL after local step "
+                        f"{local_steps}",
+                        flush=True,
+                    )
+                    os.kill(os.getpid(), signal.SIGKILL)
+            reports = service.drain()
         else:
+            reqs = make_workload(
+                args.n_requests, args.p, args.refine, args.rel_tol,
+                material_field=args.material_field,
+            )
             reports = service.solve(reqs)
+        all_reports.extend(reports)
         dt = time.perf_counter() - t0
         # Throughput counts REAL requests only — padding rows (bucket or
         # device alignment) ride in padded_rows and are excluded.
@@ -258,6 +363,34 @@ def main() -> None:
                 f"{rows:>7} {rep.t_setup:>8.3f} {rep.t_solve:>8.3f}"
             )
     print(f"service stats: {service.stats}")
+    if recovery is not None:
+        print(f"recovery: {recovery.summary()}")
+    if args.report_out:
+        import hashlib
+        import json
+
+        import numpy as np
+
+        with open(args.report_out, "w") as f:
+            for rep in all_reports:
+                x_hash = (
+                    None
+                    if rep.x is None
+                    else hashlib.sha256(
+                        np.ascontiguousarray(rep.x).tobytes()
+                    ).hexdigest()
+                )
+                f.write(json.dumps({
+                    "ticket": rep.ticket,
+                    "iterations": int(rep.iterations),
+                    "converged": bool(rep.converged),
+                    "final_rel_norm": float(rep.final_rel_norm),
+                    "precision": rep.precision,
+                    "fallback": bool(rep.fallback),
+                    "born_converged": bool(rep.born_converged),
+                    "x_sha256": x_hash,
+                }) + "\n")
+        print(f"reports -> {args.report_out}")
     if args.continuous:
         # Scheduler outcome of the chosen --chunk-policy: how many
         # chunks were dispatched, their mean chosen length, and the

@@ -14,3 +14,4 @@ from repro.serve.elasticity_service import (  # noqa: F401
     SolveRequest,
 )
 from repro.serve.engine import ServeEngine  # noqa: F401
+from repro.serve.recovery import ServiceRecovery  # noqa: F401

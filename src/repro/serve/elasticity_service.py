@@ -134,6 +134,14 @@ _STAT_HELP = {
         "Rows a reduced-precision flight re-queued onto the f64 path "
         "after stagnation detection."
     ),
+    # Recovery subsystem (repro.serve.recovery + attach_watchdog).
+    # These are labeled (policy, devices) only — a checkpoint/restore
+    # spans every flight key and a watchdog fire has none.
+    "checkpoints_written": (
+        "Recovery checkpoints committed to disk (atomic renames)."
+    ),
+    "restores": "Service restores from a recovery checkpoint.",
+    "watchdog_fires": "step() calls the watchdog flagged past timeout.",
 }
 
 
@@ -265,6 +273,11 @@ class SolveReport:
     # service re-solved on the f64 path (precision then reads "f64").
     precision: str = "f64"
     fallback: bool = False
+    # The continuous engine's submit() ticket this report answers (-1 on
+    # the generational path, which returns reports positionally).  The
+    # stable join key for crash/restore differentials: a resumed
+    # service's reports carry the same tickets the dead process issued.
+    ticket: int = -1
     x: Any = None
 
 
@@ -429,12 +442,42 @@ class ElasticityService:
         )
         self.stats = _StatsView(self.registry)
         self.spans = None
+        self.watchdog = None
         self._t_submit: dict[int, float] = {}
         self._next_flight_idx = 0
         if spans is not None:
             self.attach_spans(spans)
 
     # -- observability -------------------------------------------------------
+    def attach_watchdog(self, timeout_s: float, on_timeout=None):
+        """Arm a :class:`repro.distributed.elastic.StepWatchdog` as a
+        hang detector on ``step()``: a step exceeding ``timeout_s``
+        increments the ``watchdog_fires`` counter (labeled policy/
+        devices) and emits a ``watchdog_fire`` span on the engine track,
+        then calls ``on_timeout(elapsed_s)`` if given (escalation hook —
+        at pod scale, evicting the straggler).  Returns the watchdog so
+        callers can read ``timeouts``/``slowest``."""
+        from repro.distributed.elastic import StepWatchdog
+
+        def fire(elapsed: float) -> None:
+            self.registry.counter(
+                "service_watchdog_fires_total",
+                _STAT_HELP["watchdog_fires"],
+                policy=self.chunk_policy.name,
+                devices=self.n_shards,
+            ).inc()
+            if self.spans is not None:
+                t = self.clock()
+                self.spans.emit(
+                    "watchdog_fire", cat="engine", tid=0, start=t, end=t,
+                    elapsed_s=elapsed, step=self._step_index,
+                )
+            if on_timeout is not None:
+                on_timeout(elapsed)
+
+        self.watchdog = StepWatchdog(timeout_s, on_timeout=fire)
+        return self.watchdog
+
     def attach_spans(self, recorder) -> None:
         """Install a :class:`repro.obs.spans.SpanRecorder`.  With
         ``recorder.fence`` set, every continuous chunk is fenced with
@@ -611,7 +654,20 @@ class ElasticityService:
         ``self.chunk_policy``; every flight with live rows dispatches
         exactly one chunk per step — no flight is ever starved — and
         every decision lands in ``self.trace``.  Returns the number of
-        requests completed by this step."""
+        requests completed by this step.
+
+        With a watchdog attached (:meth:`attach_watchdog`) the whole
+        step body runs under its monitor: a step that exceeds the
+        timeout — a wedged device, a pathological compile — fires the
+        ``watchdog_fires`` counter and a span without interrupting the
+        step itself (detection, not preemption; escalation is the
+        callback's job)."""
+        if self.watchdog is not None:
+            with self.watchdog.step():
+                return self._step_body()
+        return self._step_body()
+
+    def _step_body(self) -> int:
         self._step_index += 1
         rec = self.spans
         t_step0 = self.clock() if rec is not None else 0.0
@@ -816,6 +872,7 @@ class ElasticityService:
                 padded_rows=flight.bucket,
                 precision=flight.key[-1],
                 fallback=fell_back,
+                ticket=slot.ticket,
                 x=np.asarray(flight.state.x[i])
                 if req.keep_solution
                 else None,
@@ -886,6 +943,16 @@ class ElasticityService:
             self._inc("rebuckets", flight.key)
         else:
             reset = np.zeros((bucket,), dtype=bool)
+        if (
+            flight.pending_reset is not None
+            and len(flight.pending_reset) == bucket
+        ):
+            # A pre-marked reset from outside the admit cycle — e.g. an
+            # elastic restore whose re-bucketed filler rows must be
+            # re-initialized before the next chunk reads them.  OR it in
+            # rather than overwrite; a re-bucketing above (length
+            # mismatch) already resets every non-live row, subsuming it.
+            reset |= flight.pending_reset
 
         admitted: set[int] = set()
         free = [i for i, s in enumerate(flight.slots) if s is None]

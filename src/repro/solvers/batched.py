@@ -753,6 +753,102 @@ class BatchedGMGSolver:
             new_prep["mu_w_solve"] = fold_copy(prep["mu_w_solve"], ne)
         return self._put(new_prep)
 
+    # -- host (de)serialization ----------------------------------------------
+    # The checkpoint contract for fault-tolerant serving
+    # (repro.serve.recovery): a resumable (state, prep) pair round-trips
+    # through flat {name: host numpy array} dicts BITWISE — chunked
+    # resumption is exact (see bpcg_chunk), so a restored flight that
+    # re-enters run_chunk with these arrays finishes with the same
+    # solutions and iteration counts as the uninterrupted run.  The name
+    # vocabulary is self-describing per solver: BpcgState field names
+    # for the state; ``lam_w{i}``/``mu_w{i}`` per hierarchy level,
+    # ``dinv{i}``/``lmax{i}`` per smoothed level, ``chol``, and (for
+    # genuinely mixed precision policies) the ``lam_w_solve``/
+    # ``mu_w_solve`` fine-level twins for the prep.
+
+    def state_dtype(self, field: str):
+        """The dtype contract of one BpcgState field under this solver's
+        precision policy (checkpoint restore casts through this, so a
+        manifest written by the same policy round-trips bitwise and a
+        mismatched one fails loudly in the numerics, not silently)."""
+        if field in ("iters", "stall"):
+            return np.int32
+        if field in ("active", "stalled"):
+            return np.bool_
+        return np.dtype(self.dtype)
+
+    def state_to_host(self, state: BpcgState) -> dict[str, np.ndarray]:
+        """Host-gathered flat snapshot of a resumable state: one numpy
+        array per BpcgState field, bitwise."""
+        return {
+            fld.name: np.asarray(jax.device_get(getattr(state, fld.name)))
+            for fld in dataclasses.fields(BpcgState)
+        }
+
+    def state_from_host(
+        self, arrays: dict[str, np.ndarray], *, place: bool = True
+    ) -> BpcgState:
+        """Rebuild a :class:`BpcgState` from a :meth:`state_to_host`
+        snapshot, re-laid-out over THIS solver's scenario mesh — the
+        elastic-restore path: the snapshot may come from a process with
+        a different device count.  With ``place=False`` the state stays
+        host-resident and unvalidated (for a ``take_rows`` re-bucketing
+        immediately after, when the old batch does not divide the new
+        mesh)."""
+        state = BpcgState(
+            **{
+                fld.name: np.asarray(
+                    arrays[fld.name], dtype=self.state_dtype(fld.name)
+                )
+                for fld in dataclasses.fields(BpcgState)
+            }
+        )
+        if not place:
+            return state
+        self._check_batch(state.x.shape[0], "state_from_host")
+        return self._put(state)
+
+    def prep_to_host(self, prep: dict) -> dict[str, np.ndarray]:
+        """Host-gathered flat snapshot of a prep pytree (see the
+        contract note above for the name vocabulary)."""
+        out: dict[str, np.ndarray] = {}
+        get = lambda a: np.asarray(jax.device_get(a))
+        for i, (lw, mw) in enumerate(zip(prep["lam_w"], prep["mu_w"])):
+            out[f"lam_w{i}"] = get(lw)
+            out[f"mu_w{i}"] = get(mw)
+        for i, (d, l) in enumerate(zip(prep["dinv"], prep["lmax"])):
+            out[f"dinv{i}"] = get(d)
+            out[f"lmax{i}"] = get(l)
+        out["chol"] = get(prep["chol"])
+        if self._split_fine:
+            out["lam_w_solve"] = get(prep["lam_w_solve"])
+            out["mu_w_solve"] = get(prep["mu_w_solve"])
+        return out
+
+    def prep_from_host(
+        self, arrays: dict[str, np.ndarray], *, place: bool = True
+    ) -> dict:
+        """Rebuild a prep pytree from a :meth:`prep_to_host` snapshot
+        (``place`` as in :meth:`state_from_host`).  Raises KeyError if
+        the snapshot's level structure does not match this solver —
+        e.g. a checkpoint from a different discretization or a mixed
+        policy's twins fed to a uniform-policy solver."""
+        n_lv = len(self.spaces)
+        prep = {
+            "lam_w": tuple(arrays[f"lam_w{i}"] for i in range(n_lv)),
+            "mu_w": tuple(arrays[f"mu_w{i}"] for i in range(n_lv)),
+            "dinv": tuple(arrays[f"dinv{i}"] for i in range(n_lv - 1)),
+            "lmax": tuple(arrays[f"lmax{i}"] for i in range(n_lv - 1)),
+            "chol": arrays["chol"],
+        }
+        if self._split_fine:
+            prep["lam_w_solve"] = arrays["lam_w_solve"]
+            prep["mu_w_solve"] = arrays["mu_w_solve"]
+        if not place:
+            return prep
+        self._check_batch(prep["chol"].shape[0], "prep_from_host")
+        return self._put(prep)
+
     # -- traced bodies -------------------------------------------------------
     def _restrict_field(self, field, level: int):
         """Restrict a (S, nelem_fine) per-element coefficient field to

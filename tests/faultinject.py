@@ -1,0 +1,136 @@
+"""Deterministic fault-injection harness for the continuous serving
+engine (the ``faults`` lane's shared machinery, imported by
+``tests/test_faults.py``).
+
+Three kinds of scripted fault, all deterministic — the same schedule
+always dies at the same point:
+
+* :class:`FaultInjector` — crash the service at a named engine point
+  once a given step is reached: ``"mid-chunk"`` (right after a chunk is
+  dispatched — the deferred consumed vector is lost in flight) or
+  ``"between-retire-and-refill"`` (after a retire pass emitted reports
+  but before the freed slots refill).  The crash is a
+  :class:`SimulatedCrash` raised from inside ``step()``; the test
+  abandons the instance (process death) — only the on-disk checkpoints
+  survive.
+* :func:`torn_checkpoint_write` — die mid-checkpoint: ``np.save``
+  raises after N leaves, leaving a ``.tmp-`` staging dir with no
+  manifest, exactly what a SIGKILL mid-write leaves behind.
+* :func:`run_schedule` — the replayable driver: a schedule is a list of
+  ``(step, request)`` arrivals, submitted when the engine's step index
+  reaches ``step``.  Tickets equal arrival indices (asserted), so a
+  restored run re-submits exactly the arrivals the checkpoint has not
+  seen — at the same step boundaries, with the same tickets — and the
+  engine replays the undisturbed decision sequence bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+
+class SimulatedCrash(RuntimeError):
+    """Scripted process death (stands in for SIGKILL in-process)."""
+
+
+class FaultInjector:
+    """Arms one scripted crash point on an ElasticityService instance.
+
+    Usage::
+
+        inj = FaultInjector(service)
+        inj.arm("mid-chunk", at_step=3)
+        with pytest.raises(SimulatedCrash):
+            run_schedule(service, arrivals, recovery)
+    """
+
+    POINTS = ("mid-chunk", "between-retire-and-refill")
+
+    def __init__(self, service):
+        self.service = service
+        self.tripped = False
+
+    def _maybe_trip(self, at_step: int, point: str) -> None:
+        if not self.tripped and self.service._step_index >= at_step:
+            self.tripped = True
+            raise SimulatedCrash(
+                f"scripted crash: {point} at step "
+                f"{self.service._step_index}"
+            )
+
+    def arm(self, point: str, at_step: int) -> None:
+        svc = self.service
+        if point == "mid-chunk":
+            orig = svc._launch_chunk
+
+            def launch(flight):
+                orig(flight)  # chunk dispatched; consumed vector in flight
+                self._maybe_trip(at_step, point)
+
+            svc._launch_chunk = launch
+        elif point == "between-retire-and-refill":
+            orig = svc._retire
+
+            def retire(flight):
+                orig(flight)  # reports emitted, slots freed
+                self._maybe_trip(at_step, point)
+
+            svc._retire = retire
+        else:
+            raise ValueError(
+                f"unknown fault point {point!r} (expected one of "
+                f"{self.POINTS})"
+            )
+
+
+@contextlib.contextmanager
+def torn_checkpoint_write(after_leaves: int):
+    """Crash the next checkpoint mid-write: ``np.save`` dies after
+    ``after_leaves`` successful leaf writes, leaving a manifest-less
+    ``.tmp-`` staging dir the manager must skip and later GC."""
+    import repro.checkpoint.manager as manager_mod
+
+    orig = manager_mod.np.save
+    n = 0
+
+    def bomb(path, arr, *args, **kwargs):
+        nonlocal n
+        n += 1
+        if n > after_leaves:
+            raise SimulatedCrash(
+                f"torn checkpoint write after {after_leaves} leaves"
+            )
+        return orig(path, arr, *args, **kwargs)
+
+    manager_mod.np.save = bomb
+    try:
+        yield
+    finally:
+        manager_mod.np.save = orig
+
+
+def run_schedule(service, arrivals, recovery=None):
+    """Drive ``service`` through a schedule of ``(step, request)``
+    arrivals until every arrival is submitted and the engine drains;
+    returns the drained reports.
+
+    Replay-consistent by construction: arrival ``j`` always gets ticket
+    ``j`` (tickets are sequential in submission order — asserted), a
+    checkpoint written after step ``k`` holds exactly the arrivals with
+    ``step < k``, and a restored service (``service._next_ticket`` = how
+    many the checkpoint saw) re-submits the remainder at the same step
+    boundaries.  A :class:`SimulatedCrash` from an armed injector
+    propagates to the caller mid-step, after any checkpoint of the
+    preceding boundary."""
+    i = service._next_ticket  # arrivals the checkpoint already holds
+    assert i <= len(arrivals), "schedule shorter than the restored run"
+    while True:
+        while i < len(arrivals) and arrivals[i][0] <= service._step_index:
+            ticket = service.submit(arrivals[i][1])
+            assert ticket == i, (ticket, i)
+            i += 1
+        if i == len(arrivals) and service.idle():
+            return service.drain()
+        service.step()
+        if recovery is not None:
+            recovery.maybe_checkpoint()

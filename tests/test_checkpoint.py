@@ -1,80 +1,168 @@
-"""Checkpoint manager: roundtrip, atomicity, corruption fallback, GC."""
+"""Checkpoint manager under the SERVING-state contract: flat
+``{name: array}`` snapshots (per-flight BpcgState/prep leaves plus one
+pickled host-metadata blob) restored WITHOUT a ``like`` tree through
+``restore_items``/``restore_latest_items`` — what
+:class:`repro.serve.recovery.ServiceRecovery` rides on — plus the
+manager invariants every consumer relies on: atomic rename (torn
+staging dirs invisible), per-leaf CRC fallback, keep-k GC, stale tmp
+cleanup, and the solver-level host (de)serialization being bitwise.
+The legacy pytree path (``restore(like)`` with dtype casting) keeps a
+regression test; the fault-injection suite (tests/test_faults.py)
+exercises the same surfaces under scripted crashes."""
 
-import json
-import os
+import pickle
 
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.checkpoint.manager import CheckpointManager
 
 
-def _state(x=1.0):
+def _items(x=1.0):
+    """A serving-style flat snapshot: solver array leaves + one pickled
+    host blob (exactly the layout ServiceRecovery writes)."""
+    blob = {"queue": [(0, "req")], "next_ticket": 3, "scale": x}
     return {
-        "params": {"w": jnp.full((4, 3), x), "b": jnp.zeros((3,))},
-        "step": jnp.asarray(7, jnp.int32),
+        "flight0/state/x": np.full((4, 3), x),
+        "flight0/state/iters": np.asarray([2, 5, 0, 1], np.int32),
+        "flight0/state/active": np.asarray([True, False, True, False]),
+        "flight0/prep/chol": np.full((4, 6), 0.5 * x),
+        "host": np.frombuffer(pickle.dumps(blob), dtype=np.uint8),
     }
 
 
-def test_save_restore_roundtrip(tmp_path):
+def _assert_items_equal(got: dict, want: dict) -> None:
+    assert set(got) == set(want)
+    for k in want:
+        np.testing.assert_array_equal(got[k], want[k])
+        assert got[k].dtype == want[k].dtype, k
+
+
+def test_save_restore_items_roundtrip(tmp_path):
+    """Flat serving snapshots round-trip bitwise — arrays, dtypes, and
+    the pickled blob — without any ``like`` tree."""
     mgr = CheckpointManager(str(tmp_path))
-    st = _state(2.5)
-    mgr.save(10, st, extra={"note": "hi"})
-    restored, extra = mgr.restore(_state(0.0))
-    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
-                                  np.asarray(st["params"]["w"]))
-    assert extra == {"note": "hi"}
+    items = _items(2.5)
+    mgr.save(10, items, extra={"format": 1, "devices": 1})
+    got, extra = mgr.restore_items()
+    _assert_items_equal(got, items)
+    assert extra == {"format": 1, "devices": 1}
+    blob = pickle.loads(got["host"].tobytes())
+    assert blob["next_ticket"] == 3 and blob["scale"] == 2.5
     assert mgr.latest() == 10
+
+
+def test_restore_items_missing_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        mgr.restore_items()
+    assert mgr.restore_latest_items() is None
 
 
 def test_gc_keeps_last_k(tmp_path):
     mgr = CheckpointManager(str(tmp_path), keep=2)
     for s in (1, 2, 3, 4):
-        mgr.save(s, _state(float(s)))
+        mgr.save(s, _items(float(s)))
     assert mgr.available_steps() == [3, 4]
 
 
 def test_incomplete_checkpoint_ignored(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
-    mgr.save(5, _state())
-    # simulate a crash mid-write: directory without manifest
+    mgr.save(5, _items())
+    # a crash mid-write leaves a directory without a manifest
     broken = tmp_path / "step_000000009"
     broken.mkdir()
     (broken / "leaf_00000.npy").write_bytes(b"junk")
     assert mgr.latest() == 5  # the manifest-less dir is invisible
+    _, _, step = mgr.restore_latest_items()
+    assert step == 5
 
 
 def test_corrupt_checkpoint_falls_back(tmp_path):
+    """A CRC-failing newest checkpoint is skipped: restore_latest_items
+    lands on the newest INTACT step."""
     mgr = CheckpointManager(str(tmp_path), keep=5)
-    mgr.save(1, _state(1.0))
-    mgr.save(2, _state(2.0))
-    # corrupt the newest checkpoint's first leaf
+    mgr.save(1, _items(1.0))
+    mgr.save(2, _items(2.0))
     cdir = tmp_path / "step_000000002"
     leaf = cdir / "leaf_00000.npy"
-    arr = np.load(leaf)
-    arr = arr + 999
-    np.save(leaf, arr)
-    out = mgr.restore_latest(_state(0.0))
-    assert out is not None
-    restored, _, step = out
+    np.save(leaf, np.load(leaf) + 999)
+    with pytest.raises(IOError, match="crc"):
+        mgr.restore_items(2)
+    got, _, step = mgr.restore_latest_items()
     assert step == 1
-    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
-                                  np.full((4, 3), 1.0))
+    _assert_items_equal(got, _items(1.0))
 
 
 def test_restore_casts_dtype(tmp_path):
+    """Legacy training-pytree path: restore-with-``like`` casts to the
+    target leaf dtype (the serving path never casts — state_from_host
+    re-establishes dtypes through the solver's precision policy)."""
+    import jax.numpy as jnp
+
     mgr = CheckpointManager(str(tmp_path))
     mgr.save(1, {"w": jnp.ones((2, 2), jnp.float32)})
     like = {"w": jnp.zeros((2, 2), jnp.bfloat16)}
     restored, _ = mgr.restore(like)
-    assert restored["w"].dtype == np.dtype("bfloat16") or str(
-        restored["w"].dtype) == "bfloat16"
+    assert str(restored["w"].dtype) == "bfloat16"
 
 
 def test_stale_tmp_dirs_cleaned(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
     stale = tmp_path / "step_000000003.tmp-9999"
     stale.mkdir()
-    mgr.save(4, _state())
+    mgr.save(4, _items())
     assert not stale.exists()
+
+
+def test_solver_state_host_roundtrip_bitwise(tmp_path):
+    """The serving (de)serialization contract end to end at the solver
+    level: a mid-solve BpcgState + prep pytree pushed through
+    state_to_host/prep_to_host -> CheckpointManager -> restore_items ->
+    state_from_host/prep_from_host restores every field bitwise, and a
+    further chunk from the restored state is bitwise the chunk the
+    original would have run (the chunk boundary is invisible)."""
+    from repro.fem.mesh import beam_hex
+    from repro.solvers.batched import BatchedGMGSolver
+
+    solver = BatchedGMGSolver(beam_hex(), 0, 1, maxiter=100)
+    mats = [{1: (50.0, 50.0), 2: (1.0, 1.0)}, {1: (9.0, 9.0), 2: (1.0, 3.0)}]
+    tr = np.array([[0.0, 0.0, -1e-2], [0.0, 1e-3, -2e-2]])
+    lam, mu = solver.pack_materials(mats)
+    prep = solver.prepare(lam, mu, np.ones(2, bool), solver.empty_prep(2))
+    state, _ = solver.run_chunk(
+        tr, 1e-10, np.ones(2, bool), solver.empty_state(2), prep, 2,
+        do_reset=True,
+    )
+
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(
+        1,
+        {
+            **{f"state/{k}": v for k, v in solver.state_to_host(state).items()},
+            **{f"prep/{k}": v for k, v in solver.prep_to_host(prep).items()},
+        },
+        extra={"format": 1},
+    )
+    items, _ = mgr.restore_items()
+    state2 = solver.state_from_host(
+        {k[6:]: v for k, v in items.items() if k.startswith("state/")}
+    )
+    prep2 = solver.prep_from_host(
+        {k[5:]: v for k, v in items.items() if k.startswith("prep/")}
+    )
+    for name, arr in solver.state_to_host(state).items():
+        np.testing.assert_array_equal(
+            arr, getattr(state2, name), err_msg=name
+        )
+        assert np.asarray(getattr(state2, name)).dtype == arr.dtype, name
+
+    nxt, c = solver.run_chunk(
+        tr, 1e-10, np.zeros(2, bool), state, prep, 3, do_reset=False
+    )
+    nxt2, c2 = solver.run_chunk(
+        tr, 1e-10, np.zeros(2, bool), state2, prep2, 3, do_reset=False
+    )
+    np.testing.assert_array_equal(np.asarray(nxt.x), np.asarray(nxt2.x))
+    np.testing.assert_array_equal(np.asarray(nxt.iters), np.asarray(nxt2.iters))
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(c2))

@@ -174,3 +174,55 @@ def test_watchdog_fires_and_counts():
         pass
     assert wd.timeouts == 1
     assert wd.slowest > 0.1
+
+
+def test_elastic_scenario_mesh_over_survivors():
+    """The serving-side remesh: a 1-D scenario mesh over whatever
+    devices survive — any count is valid (no architecture-bound axis),
+    so losing devices never drops survivors the way the (data, model)
+    training remesh must."""
+    import jax
+
+    from repro.distributed.elastic import (
+        elastic_scenario_mesh,
+        simulate_failures,
+    )
+
+    mesh = elastic_scenario_mesh()
+    assert mesh.devices.size == jax.device_count()
+    assert mesh.axis_names == ("scenario",)
+    if jax.device_count() > 1:
+        alive = simulate_failures(jax.devices(), 1)
+        shrunk = elastic_scenario_mesh(alive)
+        assert shrunk.devices.size == jax.device_count() - 1
+    with pytest.raises(ValueError, match="every device"):
+        simulate_failures(jax.devices(), jax.device_count())
+
+
+def test_scenario_layout_mismatches_flags_wrong_sharding():
+    """The restore-time layout assert: clean on a correctly pinned tree,
+    names the offending leaf on an unsharded one, and is a no-op for a
+    None mesh (single-device service)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.distributed.sharding import (
+        device_put_scenario,
+        scenario_layout_mismatches,
+        scenario_mesh,
+    )
+
+    n = jax.device_count()
+    mesh = scenario_mesh(n)
+    tree = {
+        "x": jnp.zeros((2 * n, 3)),
+        "iters": jnp.zeros((2 * n,), jnp.int32),
+        "scalar": jnp.asarray(1.0),  # rank-0: exempt from row sharding
+    }
+    pinned = device_put_scenario(tree, mesh)
+    assert scenario_layout_mismatches(pinned, mesh) == []
+    assert scenario_layout_mismatches(tree, None) == []
+    if n > 1:
+        bad = dict(pinned, x=np.zeros((2 * n, 3)))  # host leaf: unpinned
+        flagged = scenario_layout_mismatches(bad, mesh)
+        assert len(flagged) == 1 and "'x'" in flagged[0]

@@ -54,6 +54,7 @@ def test_docs_exist_and_have_snippets():
     assert {
         "README.md", "ARCHITECTURE.md", "KERNELS.md", "MATERIALS.md",
         "SCHEDULING.md", "OBSERVABILITY.md", "PRECISION.md",
+        "FAULT_TOLERANCE.md",
     } <= names
     by_file = {}
     for param in SNIPPETS:
@@ -66,6 +67,7 @@ def test_docs_exist_and_have_snippets():
     assert by_file.get("docs/SCHEDULING.md", 0) >= 5
     assert by_file.get("docs/OBSERVABILITY.md", 0) >= 4
     assert by_file.get("docs/PRECISION.md", 0) >= 5
+    assert by_file.get("docs/FAULT_TOLERANCE.md", 0) >= 4
 
 
 @pytest.mark.docs

@@ -1,0 +1,423 @@
+"""Fault-injection suite for the continuous serving engine (``-m
+faults``): torn-checkpoint atomicity (in-process and SIGKILL-subprocess),
+crash/restore differentials at scripted kill points, a random-schedule
+crash/restore property test, elastic restore across device counts, the
+step watchdog, and the full ``serve_solve`` kill/--resume CLI
+round-trip.
+
+The load-bearing invariant everywhere: a killed-and-restored run must
+finish every accepted request with BITWISE-identical solutions,
+iteration counts and flags to an undisturbed run — checkpoints land at
+step boundaries and chunked resumption is exact, so a crash is invisible
+in the numerics (see docs/FAULT_TOLERANCE.md).  Elastic restores onto a
+different device count keep that bitwise bar while the old bucket still
+divides the new mesh, and degrade only to the usual cross-program-shape
+~ulp wobble when re-bucketing.
+"""
+
+import glob
+import json
+import os
+import signal
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.fem.mesh import beam_hex
+from repro.serve import ElasticityService, ServiceRecovery, SolveRequest
+from repro.solvers.batched import BatchedGMGSolver
+
+from tests._hypothesis_compat import given, settings, st
+from tests.faultinject import (
+    FaultInjector,
+    SimulatedCrash,
+    run_schedule,
+    torn_checkpoint_write,
+)
+
+pytestmark = pytest.mark.faults
+
+SRC_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"
+)
+
+MATS_A = {1: (50.0, 50.0), 2: (1.0, 1.0)}
+MATS_B = {1: (80.0, 60.0), 2: (2.0, 1.0)}
+MATS_C = {1: (9.0, 9.0), 2: (1.0, 3.0)}
+
+
+@pytest.fixture(scope="module")
+def shared_solver():
+    """One compiled p=1/refine=0 solver pre-seeded into every service
+    these tests build (matching the service's solver config), so each
+    fresh service skips the rebuild/recompile."""
+    return BatchedGMGSolver(beam_hex(), 0, 1, maxiter=200)
+
+
+def _req(i: int, keep: bool = True) -> SolveRequest:
+    mats = (MATS_A, MATS_B, MATS_C)[i % 3]
+    return SolveRequest(
+        p=1,
+        refine=0,
+        materials=mats,
+        traction=(0.0, 2e-3 * (i % 2), -1e-2 * (1.0 + 0.25 * i)),
+        rel_tol=1e-8 if i % 2 else 1e-10,
+        keep_solution=keep,
+    )
+
+
+def _service(solver=None, **kw) -> ElasticityService:
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("chunk_iters", 2)
+    svc = ElasticityService(**kw)
+    if solver is not None:
+        svc._solvers[svc.group_key(_req(0))] = solver
+    return svc
+
+
+def _by_ticket(reports):
+    out = {r.ticket: r for r in reports}
+    assert len(out) == len(reports), "duplicate tickets surfaced"
+    return out
+
+
+def assert_reports_identical(base, got, *, x_mode="bitwise"):
+    """Differential oracle: same tickets, same iteration counts/flags,
+    and (x_mode="bitwise") bit-identical solutions and residual norms —
+    or allclose for cross-bucket-shape elastic restores."""
+    assert set(base) == set(got)
+    for t in sorted(base):
+        a, b = base[t], got[t]
+        assert a.iterations == b.iterations, (t, a.iterations, b.iterations)
+        assert a.converged == b.converged, t
+        assert a.precision == b.precision, t
+        assert a.fallback == b.fallback, t
+        assert not a.born_converged and not b.born_converged, (
+            "padding/born-converged rows must never surface"
+        )
+        if x_mode == "bitwise":
+            assert a.final_rel_norm == b.final_rel_norm, t
+            np.testing.assert_array_equal(np.asarray(a.x), np.asarray(b.x))
+        else:
+            np.testing.assert_allclose(
+                a.final_rel_norm, b.final_rel_norm, rtol=1e-6, atol=1e-300
+            )
+            np.testing.assert_allclose(
+                np.asarray(a.x), np.asarray(b.x), rtol=1e-9, atol=1e-14
+            )
+
+
+# -- torn checkpoints -------------------------------------------------------
+def test_torn_checkpoint_write_in_process(tmp_path):
+    """A crash mid-checkpoint-write leaves a manifest-less staging dir;
+    latest()/restore skip it and the next good save GCs it."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, {"a": np.arange(4.0), "b": np.ones(3)}, extra={"k": 1})
+    with torn_checkpoint_write(after_leaves=1):
+        with pytest.raises(SimulatedCrash):
+            mgr.save(2, {"a": np.zeros(4), "b": np.ones(3)}, extra={"k": 2})
+    assert glob.glob(str(tmp_path / "*.tmp-*")), "expected a torn staging dir"
+    assert mgr.latest() == 1
+    items, extra, step = mgr.restore_latest_items()
+    assert step == 1 and extra == {"k": 1}
+    np.testing.assert_array_equal(items["a"], np.arange(4.0))
+    mgr.save(3, {"a": np.full(4, 3.0), "b": np.ones(3)}, extra={"k": 3})
+    assert not glob.glob(str(tmp_path / "*.tmp-*")), "stale tmp not GCed"
+    assert mgr.latest() == 3
+
+
+def test_sigkill_mid_checkpoint_write_subprocess(tmp_path):
+    """Real SIGKILL between two leaf writes: the parent process finds an
+    intact older checkpoint and a skippable torn one."""
+    script = """
+import os, signal, sys
+import numpy as np
+from repro.checkpoint.manager import CheckpointManager
+
+mgr = CheckpointManager(sys.argv[1], keep=3)
+mgr.save(1, {"a": np.arange(4.0), "b": np.ones(3)}, extra={"k": 1})
+orig, calls = np.save, [0]
+def bomb(path, arr, *a, **kw):
+    calls[0] += 1
+    if calls[0] > 1:
+        os.kill(os.getpid(), signal.SIGKILL)
+    return orig(path, arr, *a, **kw)
+np.save = bomb
+mgr.save(2, {"a": np.zeros(4), "b": np.ones(3)}, extra={"k": 2})
+"""
+    proc = subprocess.run(
+        [sys.executable, "-c", script, str(tmp_path)],
+        env={**os.environ, "PYTHONPATH": SRC_DIR},
+        capture_output=True,
+        text=True,
+        timeout=120,
+    )
+    assert proc.returncode == -signal.SIGKILL, proc.stderr
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    assert mgr.latest() == 1
+    items, extra, step = mgr.restore_latest_items()
+    assert step == 1
+    np.testing.assert_array_equal(items["a"], np.arange(4.0))
+
+
+# -- crash/restore differentials -------------------------------------------
+ARRIVALS = [(0, 0), (0, 1), (0, 2), (1, 3), (2, 4), (4, 5)]
+
+
+def _schedule():
+    return [(s, _req(i)) for s, i in ARRIVALS]
+
+
+@pytest.mark.parametrize(
+    "point", ["mid-chunk", "between-retire-and-refill"]
+)
+def test_crash_restore_differential(tmp_path, shared_solver, point):
+    """Kill the engine at a scripted point mid-run; a fresh service
+    restored from the last checkpoint and driven through the SAME
+    arrival schedule drains bitwise-identical reports."""
+    base = _by_ticket(run_schedule(_service(shared_solver), _schedule()))
+    assert set(base) == set(range(len(ARRIVALS)))
+
+    svc = _service(shared_solver)
+    rec = ServiceRecovery(svc, str(tmp_path), every=1)
+    FaultInjector(svc).arm(point, at_step=2)
+    with pytest.raises(SimulatedCrash):
+        run_schedule(svc, _schedule(), rec)
+    assert rec.manager.latest() is not None
+
+    svc2 = _service(shared_solver)
+    rec2 = ServiceRecovery(svc2, str(tmp_path), every=1)
+    assert rec2.restore()
+    got = _by_ticket(run_schedule(svc2, _schedule(), rec2))
+    assert_reports_identical(base, got)
+    assert svc2.stats["restores"] == 1
+
+
+def test_crash_during_checkpoint_then_resume(tmp_path, shared_solver):
+    """Die MID-CHECKPOINT (torn write) and restart: the torn checkpoint
+    is skipped, the previous one restores, and the drained reports are
+    still bitwise identical — a checkpoint crash costs progress, never
+    correctness."""
+    up_front = [(0, _req(i)) for i in range(len(ARRIVALS))]
+    base = _by_ticket(run_schedule(_service(shared_solver), up_front))
+
+    svc = _service(shared_solver)
+    rec = ServiceRecovery(svc, str(tmp_path), every=1)
+    for r in [_req(i) for i in range(len(ARRIVALS))]:
+        svc.submit(r)
+    svc.step()
+    rec.maybe_checkpoint()
+    svc.step()
+    with torn_checkpoint_write(after_leaves=3):
+        with pytest.raises(SimulatedCrash):
+            rec.checkpoint()
+    assert rec.manager.latest() == 1  # step-2 checkpoint is torn
+
+    svc2 = _service(shared_solver)
+    rec2 = ServiceRecovery(svc2, str(tmp_path))
+    assert rec2.restore()
+    assert svc2._step_index == 1
+    while not svc2.idle():
+        svc2.step()
+    got = _by_ticket(svc2.drain())
+    assert_reports_identical(base, got)
+
+
+def test_restore_preconditions(tmp_path, shared_solver):
+    """restore() demands an empty service, reports absence honestly, and
+    refuses a max_batch mismatch loudly."""
+    svc = _service(shared_solver)
+    rec = ServiceRecovery(svc, str(tmp_path))
+    assert rec.restore() is False  # empty dir: nothing to restore
+    svc.submit(_req(0))
+    svc.step()
+    rec.checkpoint()
+    with pytest.raises(RuntimeError, match="empty service"):
+        rec.restore()
+    svc_bad = _service(shared_solver, max_batch=8)
+    with pytest.raises(ValueError, match="max_batch"):
+        ServiceRecovery(svc_bad, str(tmp_path)).restore()
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_property_random_schedule_crash_restore(seed, tmp_path_factory):
+    """Property: for a RANDOM arrival/kill schedule, restart-and-drain
+    is observationally identical to never having crashed (solutions,
+    iteration counts, flags, tickets — bitwise), and padding rows never
+    surface.  Runs under hypothesis in CI; skipped when the local
+    container lacks it (tests/_hypothesis_compat)."""
+    tmp_path = tmp_path_factory.mktemp(f"faults{seed}")
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(3, 7))
+    steps = np.sort(rng.integers(0, 5, size=n))
+    arrivals = [(int(s), _req(i)) for i, s in enumerate(steps)]
+    point = FaultInjector.POINTS[int(rng.integers(0, 2))]
+    kill_at = int(rng.integers(1, 6))
+
+    solver = BatchedGMGSolver(beam_hex(), 0, 1, maxiter=200)
+    base = _by_ticket(run_schedule(_service(solver), arrivals))
+    assert set(base) == set(range(n))
+
+    svc = _service(solver)
+    rec = ServiceRecovery(svc, str(tmp_path), every=1)
+    FaultInjector(svc).arm(point, at_step=kill_at)
+    try:
+        got = _by_ticket(run_schedule(svc, arrivals, rec))
+    except SimulatedCrash:
+        svc2 = _service(solver)
+        rec2 = ServiceRecovery(svc2, str(tmp_path), every=1)
+        assert rec2.restore()
+        got = _by_ticket(run_schedule(svc2, arrivals, rec2))
+    assert_reports_identical(base, got)
+
+
+# -- elastic restore across device counts ----------------------------------
+@pytest.mark.multidevice
+def test_elastic_restore_8_to_4_bitwise(tmp_path):
+    """A solve checkpointed on 8 devices restores onto a 4-device mesh
+    through the identity path (the old bucket still divides the new
+    mesh): every leaf lands with axis-0 NamedSharding on the survivor
+    mesh and the drained reports are BITWISE identical — sharding stays
+    a pure implementation detail across the restart."""
+    from repro.distributed.elastic import (
+        elastic_scenario_mesh,
+        simulate_failures,
+    )
+    from repro.distributed.sharding import scenario_layout_mismatches
+
+    mesh8 = elastic_scenario_mesh()
+    assert mesh8.devices.size == 8
+    reqs = [_req(i) for i in range(6)]
+
+    svc0 = _service(max_batch=8, mesh=mesh8)
+    base = _by_ticket(run_schedule(svc0, [(0, r) for r in reqs]))
+
+    svc1 = _service(max_batch=8, mesh=mesh8)
+    rec1 = ServiceRecovery(svc1, str(tmp_path), every=1)
+    for r in reqs:
+        svc1.submit(r)
+    svc1.step()
+    rec1.maybe_checkpoint()
+
+    # 4 devices fail; the survivors' scenario mesh hosts the restore.
+    mesh4 = elastic_scenario_mesh(simulate_failures(jax.devices(), 4))
+    assert mesh4.devices.size == 4
+    svc2 = _service(max_batch=8, mesh=mesh4)
+    rec2 = ServiceRecovery(svc2, str(tmp_path))
+    assert rec2.restore()
+    for fl in svc2._flights.values():
+        assert fl.bucket % 4 == 0  # identity path: bucket kept
+        assert fl.pending_reset is None
+        assert scenario_layout_mismatches(fl.state, svc2.mesh) == []
+        assert scenario_layout_mismatches(fl.prep, svc2.mesh) == []
+    got = _by_ticket(run_schedule(svc2, [(0, r) for r in reqs], rec2))
+    assert_reports_identical(base, got)
+
+
+@pytest.mark.multidevice
+def test_elastic_restore_2_to_8_rebucket(tmp_path):
+    """Growing 2 -> 8 devices forces a re-bucket (old bucket 4 does not
+    divide the 8-device mesh): take_rows re-lays the live rows onto a
+    device-aligned bucket, filler rows restore as born-converged
+    padding, iteration counts and flags stay exact, and solutions agree
+    to the usual cross-bucket-shape fusion wobble."""
+    from repro.distributed.sharding import (
+        scenario_layout_mismatches,
+        scenario_mesh,
+    )
+
+    mesh2 = scenario_mesh(2)
+    reqs = [_req(i) for i in range(5)]
+
+    svc0 = _service(mesh=mesh2)
+    base = _by_ticket(run_schedule(svc0, [(0, r) for r in reqs]))
+
+    svc1 = _service(mesh=mesh2)
+    rec1 = ServiceRecovery(svc1, str(tmp_path), every=1)
+    for r in reqs:
+        svc1.submit(r)
+    svc1.step()
+    rec1.maybe_checkpoint()
+    old_buckets = [fl.bucket for fl in svc1._flights.values()]
+    assert any(b % 8 for b in old_buckets), "schedule must force a re-bucket"
+
+    mesh8 = scenario_mesh(8)
+    svc2 = _service(mesh=mesh8)
+    rec2 = ServiceRecovery(svc2, str(tmp_path))
+    assert rec2.restore()
+    for fl in svc2._flights.values():
+        assert fl.bucket % 8 == 0
+        assert fl.pending_reset is not None and fl.pending_reset.any()
+        assert scenario_layout_mismatches(fl.state, svc2.mesh) == []
+    got = _by_ticket(run_schedule(svc2, [(0, r) for r in reqs], rec2))
+    assert_reports_identical(base, got, x_mode="close")
+    assert svc2.stats["restores"] == 1
+
+
+# -- watchdog ----------------------------------------------------------------
+def test_watchdog_fires_counter_and_span():
+    """A step exceeding the armed timeout increments watchdog_fires and
+    emits a watchdog_fire span on the engine track (the first step of a
+    fresh service compiles, so it dwarfs the 1ms timeout)."""
+    from repro.obs import SpanRecorder
+
+    svc = _service()  # no pre-seeded solver: first step compiles
+    svc.attach_spans(SpanRecorder())
+    fired = []
+    wd = svc.attach_watchdog(1e-3, on_timeout=fired.append)
+    svc.submit(_req(0))
+    while not svc.idle():
+        svc.step()
+    svc.drain()
+    assert wd.timeouts >= 1
+    assert fired and fired[0] > 1e-3
+    assert svc.stats["watchdog_fires"] >= 1
+    assert svc.spans.count("watchdog_fire") >= 1
+
+
+# -- CLI acceptance: SIGKILL + --resume -------------------------------------
+@pytest.mark.slow
+def test_cli_kill_resume_bitwise(tmp_path):
+    """The ISSUE acceptance run, automated: serve_solve --continuous
+    SIGKILLed mid-flight (--kill-after-steps) and restarted with
+    --resume completes every accepted request with bitwise-identical
+    solutions and iteration counts vs an uninterrupted run — compared
+    through --report-out JSON lines (solution vectors by sha256)."""
+    common = [
+        sys.executable, "-m", "repro.launch.serve_solve", "--continuous",
+        "--n-requests", "6", "--max-batch", "4", "--p", "1",
+        "--refine", "0", "--rel-tol", "1e-10", "--chunk-iters", "2",
+    ]
+    env = {**os.environ, "PYTHONPATH": SRC_DIR}
+    run = lambda extra: subprocess.run(
+        common + extra, env=env, cwd=tmp_path,
+        capture_output=True, text=True, timeout=600,
+    )
+    a = run(["--report-out", "a.jsonl"])
+    assert a.returncode == 0, a.stderr
+    b = run([
+        "--checkpoint-dir", "ckpt", "--checkpoint-every", "1",
+        "--kill-after-steps", "1", "--report-out", "b.jsonl",
+    ])
+    assert b.returncode == -signal.SIGKILL, (b.returncode, b.stderr)
+    assert not (tmp_path / "b.jsonl").exists()  # died mid-flight
+    c = run([
+        "--checkpoint-dir", "ckpt", "--resume", "--report-out", "c.jsonl",
+    ])
+    assert c.returncode == 0, c.stderr
+    assert "resumed from checkpoint step" in c.stdout
+
+    load = lambda p: {
+        rec["ticket"]: rec
+        for rec in map(json.loads, (tmp_path / p).read_text().splitlines())
+    }
+    base, got = load("a.jsonl"), load("c.jsonl")
+    assert set(base) == set(got) == set(range(6))
+    for t in base:
+        assert base[t] == got[t], (t, base[t], got[t])
+        assert base[t]["x_sha256"] is not None

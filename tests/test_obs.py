@@ -368,6 +368,9 @@ LEGACY_KEYS = {
     "cache_hits", "cache_misses", "generations", "chunks",
     "chunk_iters_dispatched", "wasted_iters", "refills", "rebuckets",
     "prep_calls", "prep_row_copies", "precision_fallbacks",
+    # recovery counters (PR 9): checkpoint writes, restores, and step
+    # watchdog fires ride the same registry/stats surface
+    "checkpoints_written", "restores", "watchdog_fires",
 }
 
 
